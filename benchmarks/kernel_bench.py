@@ -1,0 +1,59 @@
+"""Micro-benchmarks for the Pallas kernels' XLA fallbacks + wire-format
+accounting (wall-clock interpret-mode numbers are NOT TPU times; the roofline
+section carries the deployment analysis).  Also measures the exact-mode
+FLECS-CGD step cost scaling in d and m (the paper's O(md²) worker cost)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressors import get_compressor
+from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
+from repro.data.logreg import make_problem
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(csv_rows: list):
+    print("\n=== compressor micro-bench (XLA path, CPU wall time) ===")
+    rng = np.random.default_rng(0)
+    for n in (1 << 14, 1 << 18):
+        x = jnp.asarray(rng.normal(size=n), jnp.float32)
+        for name in ("dither64", "natural", "topk0.1"):
+            Q = get_compressor(name)
+            f = jax.jit(lambda k, x, Q=Q: Q.compress(k, x))
+            us = _time(f, jax.random.key(0), x)
+            print(f"  {name:10s} n={n:7d}: {us:9.1f} us "
+                  f"({Q.bits_per_value:.0f} bits/val)")
+            csv_rows.append((f"compressor/{name}/n{n}", us,
+                             f"bits={Q.bits_per_value:.0f}"))
+
+    print("\n=== FLECS-CGD step cost vs (d, m) — worker O(md²) claim ===")
+    for d in (123, 500):
+        prob = make_problem(d=d, n_workers=8, r=32, mu=1e-3, seed=0)
+        lg, lh = prob.make_oracles()
+        for m in (1, 4, 8):
+            cfg = FlecsConfig(m=m, grad_compressor="dither64",
+                              hess_compressor="dither64")
+            step = jax.jit(make_flecs_step(cfg, lg, lh))
+            st = init_state(jnp.zeros(prob.d), prob.n_workers)
+
+            def f(st, key):
+                s2, _ = step(st, key)
+                return s2.w
+
+            us = _time(f, st, jax.random.key(0), iters=10)
+            print(f"  d={d:5d} m={m}: {us:9.1f} us/iter")
+            csv_rows.append((f"flecs_step/d{d}/m{m}", us, ""))

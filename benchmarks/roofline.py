@@ -1,0 +1,78 @@
+"""Roofline report generator: reads benchmarks/dryrun_results.json (written
+by repro.launch.dryrun) and renders the §Roofline table with the three terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS ratio, and per-pair one-liners."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+RESULTS = HERE / "dryrun_results.json"
+
+ADVICE = {
+    ("train", "collective"): "cut per-microbatch grad all-reduce: fewer/larger "
+        "microbatches, int8 FLECS-CGD reduction, or reduce-scatter grads",
+    ("train", "compute"): "raise MXU utilization: triangular attention "
+        "blocking (flash kernel), larger per-chip batch",
+    ("train", "memory"): "reduce weight re-reads: fewer microbatches, "
+        "bf16 optimizer state",
+    ("prefill", "collective"): "overlap TP collectives with compute; shard "
+        "sequence instead of gathering weights per layer",
+    ("prefill", "compute"): "flash kernel halves masked-causal FLOPs",
+    ("prefill", "memory"): "fuse attention (flash) to avoid score spills",
+    ("decode", "collective"): "batch expert gathers; keep weights resident "
+        "(no FSDP gather at decode)",
+    ("decode", "memory"): "decode is weight/cache-bandwidth bound: quantize "
+        "cache (int8 KV), MLA-style latent cache",
+    ("decode", "compute"): "unexpected for decode — check batching",
+}
+
+
+def kind_of(shape):
+    return {"train_4k": "train", "prefill_32k": "prefill",
+            "decode_32k": "decode", "long_500k": "decode"}[shape]
+
+
+def render(csv_rows=None, fh=None):
+    data = json.loads(RESULTS.read_text())
+    data = [r for r in data if not r.get("flecs")]
+    data.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    p = lambda *a: print(*a, file=fh)
+    p("\n=== §Roofline: per (arch x shape x mesh) — single-pod table "
+      "(2-pod rows prove the pod axis) ===")
+    hdr = (f"{'arch':26s}{'shape':13s}{'mesh':9s}{'t_comp(s)':>10s}"
+           f"{'t_mem(s)':>10s}{'t_coll(s)':>10s} {'dominant':11s}"
+           f"{'useful%':>8s}")
+    p(hdr)
+    for r in data:
+        if r["status"] == "SKIP":
+            p(f"{r['arch']:26s}{r['shape']:13s}{r['mesh']:9s}"
+              f"{'SKIP: ' + r['reason'][:58]:s}")
+            continue
+        if r["status"] != "OK":
+            p(f"{r['arch']:26s}{r['shape']:13s}{r['mesh']:9s}FAIL")
+            continue
+        ratio = r.get("useful_flops_ratio") or 0.0
+        p(f"{r['arch']:26s}{r['shape']:13s}{r['mesh']:9s}"
+          f"{r['t_compute_s']:10.4f}{r['t_memory_s']:10.4f}"
+          f"{r['t_collective_s']:10.4f} {r['dominant']:11s}"
+          f"{100 * min(ratio, 9.99):8.1f}")
+        if csv_rows is not None and r["mesh"] == "16x16":
+            csv_rows.append((
+                f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                f"dom={r['dominant']};tc={r['t_compute_s']:.4f};"
+                f"tm={r['t_memory_s']:.4f};tx={r['t_collective_s']:.4f}"))
+    p("\nPer-pair advice (dominant-term lever):")
+    seen = set()
+    for r in data:
+        if r["status"] != "OK" or r["mesh"] != "16x16":
+            continue
+        key = (kind_of(r["shape"]), r["dominant"])
+        if key in seen:
+            continue
+        seen.add(key)
+        p(f"  {key[0]:8s}/{key[1]:11s}: {ADVICE.get(key, '-')}")
+
+
+if __name__ == "__main__":
+    render()

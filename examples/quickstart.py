@@ -1,0 +1,44 @@
+"""Quickstart: FLECS-CGD on a federated logistic-regression problem.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs the paper's Algorithm 1 (FedSONIA direction, direct Hessian update,
+random-dithering compression) on a synthetic heterogeneous federation and
+prints objective / gradient norm / communicated bits per node.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
+from repro.data.logreg import make_problem
+
+
+def main():
+    prob = make_problem(d=123, n_workers=20, r=64, mu=1e-3, seed=0)
+    local_grad, local_hvp = prob.make_oracles()
+
+    cfg = FlecsConfig(
+        m=4,                          # sketch memory (columns of S_k)
+        grad_compressor="dither64",   # the "CGD" part — set "identity" for FLECS
+        hess_compressor="dither64",
+        alpha=1.0, beta=1.0, gamma=1.0,
+    )
+    step = jax.jit(make_flecs_step(cfg, local_grad, local_hvp))
+    state = init_state(jnp.zeros(prob.d), prob.n_workers)
+
+    key = jax.random.key(0)
+    print(f"{'iter':>5s} {'F(w)':>10s} {'||grad||':>10s} {'kbits/node':>11s}")
+    for k in range(201):
+        key, sk = jax.random.split(key)
+        state, aux = step(state, sk)
+        if k % 25 == 0:
+            F = float(prob.global_loss(state.w))
+            g = float(jnp.linalg.norm(prob.global_grad(state.w)))
+            print(f"{k:5d} {F:10.6f} {g:10.2e} "
+                  f"{float(state.bits_per_node) / 1e3:11.1f}")
+    print("done — compare against examples/federated_logreg.py for the "
+          "FLECS/DIANA/FedNL baselines on the same problem.")
+
+
+if __name__ == "__main__":
+    main()

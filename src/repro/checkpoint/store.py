@@ -1,0 +1,59 @@
+"""Minimal sharded-pytree checkpointing (npz-based, no external deps).
+
+Saves a pytree of (possibly sharded) arrays by flattening with path-derived
+keys; restores onto the caller's shardings.  Good enough for the example
+drivers and resumable federated runs; swap for Orbax in a real deployment.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _keys(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    keys = []
+    for path, _ in flat:
+        parts = []
+        for k in path:
+            parts.append(str(getattr(k, "key", getattr(k, "idx", k))))
+        keys.append("/".join(parts))
+    return keys, [l for _, l in flat], treedef
+
+
+def save(path, tree, step: int = 0):
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    keys, leaves, _ = _keys(tree)
+    arrays, dtypes = {}, []
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        dtypes.append(str(a.dtype))
+        if a.dtype.type.__module__ != "numpy":     # ml_dtypes (bf16, fp8):
+            a = a.astype(np.float32)               # store widened; restore
+                                                   # casts back via ref dtype
+        arrays[f"a{i}"] = a
+    np.savez(path / "arrays.npz", **arrays)
+    (path / "meta.json").write_text(json.dumps(
+        {"keys": keys, "step": step, "dtypes": dtypes}))
+
+
+def restore(path, like, shardings=None):
+    """Restore into the structure of ``like`` (arrays or SDS pytree)."""
+    path = Path(path)
+    meta = json.loads((path / "meta.json").read_text())
+    data = np.load(path / "arrays.npz")
+    keys_like, leaves_like, treedef = _keys(like)
+    assert meta["keys"] == keys_like, "checkpoint/model structure mismatch"
+    out = []
+    for i, ref in enumerate(leaves_like):
+        arr = data[f"a{i}"]
+        assert tuple(arr.shape) == tuple(ref.shape), (arr.shape, ref.shape)
+        out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree, meta["step"]

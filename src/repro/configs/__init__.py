@@ -1,0 +1,6 @@
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                reduce_for_smoke)
+from repro.configs.registry import ARCHS, get_config, list_archs
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "reduce_for_smoke",
+           "ARCHS", "get_config", "list_archs"]

@@ -1,0 +1,13 @@
+"""FLECS-CGD core: the paper's primary contribution as a composable library.
+
+Exact mode (paper-scale problems):
+    from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
+DL-scale trainer (TPU-pod realization):
+    from repro.core.dl_flecs import FlecsDLConfig, make_flecs_train_step
+"""
+from repro.core.compressors import Compressor, get_compressor
+from repro.core.flecs import FlecsConfig, FlecsState, init_state, make_flecs_step
+from repro.core.sketch import sketch
+
+__all__ = ["Compressor", "get_compressor", "FlecsConfig", "FlecsState",
+           "init_state", "make_flecs_step", "sketch"]

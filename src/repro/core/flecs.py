@@ -1,0 +1,152 @@
+"""FLECS-CGD, Algorithm 1 — exact mode (d×d per-worker state on the server).
+
+This is the paper-faithful reproduction used to validate against the paper's
+own experiments (regularized logistic regression, LIBSVM-dim synthetic
+shards).  One `FlecsState` + `flecs_step` pair implements BOTH:
+
+  * FLECS      — gradient compressor = identity (the paper's baseline)
+  * FLECS-CGD  — gradient compressor = random dithering (+ shift h update)
+
+and both Hessian updates (Alg 2 truncated L-SR1 / Alg 3 direct) and both
+iterate updates (Alg 4 truncated inverse / Alg 5 FedSONIA), selected in
+`FlecsConfig` exactly as in the paper's experiment grid.
+
+Everything is jit-compatible; worker loops are vmapped (the n workers of a
+federation are a batch dim here).
+
+Communication accounting (per worker per iteration, bits):
+  c_k^i : d values   x c bits        (gradient difference, compressed)
+  C_k^i : d·m values x c bits        (sketched-Hessian difference, compressed)
+  M_k^i : m² float32
+  FLECS sends the gradient uncompressed: d x 32 instead of d x c.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import Compressor, get_compressor
+from repro.core.directions import (fedsonia_direction,
+                                   truncated_inverse_direction,
+                                   truncated_inverse_direction_floored)
+from repro.core.sketch import sketch
+from repro.core.updates import direct_update, truncated_lsr1_update
+
+
+@dataclasses.dataclass(frozen=True)
+class FlecsConfig:
+    m: int = 1                        # memory size (sketch columns)
+    omega: float = 1e-5               # lower truncation (ω)
+    Omega: float = 1e8                # upper truncation (Ω)
+    alpha: float = 1.0                # iterate step size
+    beta: float = 1.0                 # direct-update learning rate
+    gamma: float = 1.0                # shift learning rate (≤ 1/(ω_Q+1))
+    rho: Optional[float] = None       # FedSONIA complement step (default 1/Ω)
+    grad_compressor: str = "dither64"     # "identity" => plain FLECS
+    hess_compressor: str = "dither64"
+    hessian_update: str = "direct"    # "direct" (Alg 3) | "lsr1" (Alg 2)
+    direction: str = "fedsonia"       # "fedsonia" (Alg 5) | "truncated_inverse"
+    sketch_kind: str = "rademacher"
+    tinv_floor: float = 0.0           # curvature floor for Alg 4 (see
+                                      # directions.truncated_inverse_direction_floored)
+
+    @property
+    def rho_val(self):
+        return 1.0 / self.Omega if self.rho is None else self.rho
+
+
+class FlecsState(NamedTuple):
+    w: jnp.ndarray        # [d]
+    h: jnp.ndarray        # [n, d]   per-worker gradient shifts
+    B: jnp.ndarray        # [n, d, d] per-worker Hessian approximations
+    k: jnp.ndarray        # iteration counter
+    bits_per_node: jnp.ndarray   # cumulative communicated bits per worker
+
+
+def init_state(w0: jnp.ndarray, n_workers: int) -> FlecsState:
+    d = w0.shape[0]
+    return FlecsState(
+        w=w0.astype(jnp.float32),
+        h=jnp.zeros((n_workers, d), jnp.float32),
+        B=jnp.zeros((n_workers, d, d), jnp.float32),
+        k=jnp.zeros((), jnp.int32),
+        bits_per_node=jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64
+                                else jnp.float32),
+    )
+
+
+def make_flecs_step(cfg: FlecsConfig,
+                    local_grad: Callable,      # (w, worker_id, key) -> g
+                    local_hvp: Callable):      # (w, V[d,m], worker_id, key) -> HV
+    """Build a jit-able step(state, key) -> (state, aux)."""
+    Q = get_compressor(cfg.grad_compressor)
+    C = get_compressor(cfg.hess_compressor)
+
+    def step(state: FlecsState, key) -> tuple:
+        n, d = state.h.shape
+        m = cfg.m
+        S = sketch(cfg.sketch_kind, d, m, state.k)          # shared via seed
+
+        k_g, k_h, k_q, k_c = jax.random.split(key, 4)
+
+        def worker(i, hk, Bk, kq, kc):
+            g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
+            Y = local_hvp(state.w, S, i, jax.random.fold_in(k_h, i))
+            M = S.T @ Y                                     # m x m (exact)
+            c = Q.compress(kq, g - hk)                      # compressed grad diff
+            BS = Bk @ S
+            Cm = C.compress(kc, Y - BS)                     # compressed hess diff
+            return c, M, Cm, BS
+
+        ks_q = jax.random.split(k_q, n)
+        ks_c = jax.random.split(k_c, n)
+        c_all, M_all, C_all, BS_all = jax.vmap(worker)(
+            jnp.arange(n), state.h, state.B, ks_q, ks_c)
+
+        # --- server ---------------------------------------------------------
+        g_tilde_i = c_all + state.h                          # [n, d]
+        Y_tilde_i = C_all + BS_all                           # [n, d, m]
+
+        if cfg.hessian_update == "direct":
+            B_new = jax.vmap(
+                lambda B, Y, M: direct_update(B, Y, M, cfg.beta))(
+                    state.B, Y_tilde_i, M_all)
+        else:
+            B_new = jax.vmap(
+                lambda B, Y, M: truncated_lsr1_update(B, Y, M, S,
+                                                      cfg.omega)[0])(
+                    state.B, Y_tilde_i, M_all)
+
+        g_tilde = jnp.mean(g_tilde_i, axis=0)
+        Y_tilde = jnp.mean(Y_tilde_i, axis=0)
+        M_bar = jnp.mean(M_all, axis=0)
+        B_bar = jnp.mean(B_new, axis=0)
+
+        if cfg.direction == "truncated_inverse":
+            if cfg.tinv_floor > 0:
+                p = truncated_inverse_direction_floored(
+                    B_bar, g_tilde, cfg.omega, cfg.Omega, cfg.tinv_floor)
+            else:
+                p = truncated_inverse_direction(B_bar, g_tilde, cfg.omega,
+                                                cfg.Omega)
+        else:
+            p = fedsonia_direction(Y_tilde, M_bar, g_tilde, cfg.omega,
+                                   cfg.Omega, cfg.rho_val)
+
+        w_new = state.w + cfg.alpha * p
+        h_new = state.h + cfg.gamma * c_all
+
+        bits = (d * Q.bits_per_value            # c_k^i
+                + d * m * C.bits_per_value      # C_k^i
+                + m * m * 32.0)                 # M_k^i (float32)
+        new_state = FlecsState(w_new, h_new, B_new, state.k + 1,
+                               state.bits_per_node + bits)
+        aux = {"g_tilde_norm": jnp.linalg.norm(g_tilde),
+               "dir_norm": jnp.linalg.norm(p),
+               "bits_per_node": new_state.bits_per_node}
+        return new_state, aux
+
+    return step

@@ -1,0 +1,30 @@
+"""Sketched Hessians without materializing the Hessian.
+
+Y = ∇²f(w) S via m Hessian-vector products: hvp(v) = d/dt ∇f(w + t v)|_0
+(jvp of grad).  Works for any JAX-differentiable loss, including losses
+through lax.scan (SSD/RG-LRU recurrences) — exercised by the smoke tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def hvp(loss_fn, w, v, *args):
+    """∇²f(w) · v for flat w.  loss_fn: (w, *args) -> scalar."""
+    g = lambda w_: jax.grad(loss_fn)(w_, *args)
+    return jax.jvp(g, (w,), (v,))[1]
+
+
+def sketched_hessian(loss_fn, w, S, *args):
+    """Y = ∇²f(w) S  — S: [d, m]; returns [d, m]."""
+    f = functools.partial(hvp, loss_fn, w)
+    return jax.vmap(lambda v: f(v, *args), in_axes=1, out_axes=1)(S)
+
+
+def hvp_pytree(loss_fn, params, v_tree, *args):
+    """HVP for pytree params (DL-scale path): v_tree matches params."""
+    g = lambda p: jax.grad(loss_fn)(p, *args)
+    return jax.jvp(g, (params,), (v_tree,))[1]

@@ -1,0 +1,24 @@
+"""Sketch matrices S_k ∈ R^{d×m}.
+
+The paper guarantees worker/server agreement by seeding with the iteration
+number k (Algorithm 1 line 3/9) — we do exactly that: ``sketch(kind, d, m,
+k)`` is a pure function of (kind, d, m, k), never stored or communicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sketch(kind: str, d: int, m: int, k) -> jnp.ndarray:
+    """Deterministic S_k from iteration number k.  [d, m], f32."""
+    key = jax.random.fold_in(jax.random.key(17), k)
+    if kind == "rademacher":
+        return (jax.random.rademacher(key, (d, m), jnp.float32)
+                / jnp.sqrt(jnp.float32(m)))
+    if kind == "gaussian":
+        return jax.random.normal(key, (d, m)) / jnp.sqrt(jnp.float32(m))
+    if kind == "coordinate":
+        idx = jax.random.choice(key, d, (m,), replace=False)
+        return jnp.zeros((d, m), jnp.float32).at[idx, jnp.arange(m)].set(1.0)
+    raise ValueError(kind)

@@ -1,0 +1,47 @@
+"""jit'd public wrapper for the dithering kernel: arbitrary-shape tensors
+are flattened/padded into the kernel's [rows, 128k-cols] layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dither.dither import dither_decode, dither_encode
+
+_LANES = 128
+
+
+def _to_2d(x, cols: int):
+    n = x.size
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(rows, cols), n
+
+
+def quantize(key, x, *, s: int = 127, block_rows: int = 8, cols: int = 512,
+             interpret: bool = True):
+    """Random-dithering quantize any-shape tensor.
+
+    Returns (levels int8 [rows, cols], scales f32 [rows/block_rows],
+    meta) — decode with ``dequantize``.  interpret=True on CPU; on TPU set
+    interpret=False (the kernel is the deployment path).  Not jitted here
+    (meta carries static layout info); wrap call sites in jit."""
+    x2, n = _to_2d(x.astype(jnp.float32), cols)
+    rows = x2.shape[0]
+    rb = min(block_rows, rows)
+    pad_rows = (-rows) % rb
+    if pad_rows:
+        x2 = jnp.pad(x2, ((0, pad_rows), (0, 0)))
+    u = jax.random.uniform(key, x2.shape, jnp.float32)
+    levels, scales = dither_encode(x2, u, s=s, block_rows=rb,
+                                   interpret=interpret)
+    return levels, scales, (x.shape, n, rb)
+
+
+def dequantize(levels, scales, meta, *, interpret: bool = True):
+    shape, n, rb = meta
+    out = dither_decode(levels, scales, block_rows=rb, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the random-dithering quantizer kernel.
+
+Q(x): per-block ∞-norm random dithering to s levels, int8 payload + f32
+scale per block.  The kernel operates on 2D [rows, cols] views with one
+scale per row-block so the TPU grid maps to (row_blocks,); the reference
+mirrors that blocking exactly (bitwise-identical level grids given the same
+uniform samples).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dither_encode_ref(x, u, s: int, block_rows: int):
+    """x, u: [R, C] (u ~ U[0,1) random); returns (levels int8 [R, C],
+    scale f32 [R // block_rows])."""
+    R, C = x.shape
+    nb = R // block_rows
+    xb = x.reshape(nb, block_rows, C).astype(jnp.float32)
+    norm = jnp.max(jnp.abs(xb), axis=(1, 2))
+    norm = jnp.where(norm == 0, 1.0, norm)
+    y = xb / norm[:, None, None] * s
+    lo = jnp.floor(y)
+    ub = u.reshape(nb, block_rows, C)
+    levels = (lo + (ub < (y - lo))).astype(jnp.int8)
+    return levels.reshape(R, C), (norm / s).astype(jnp.float32)
+
+
+def dither_decode_ref(levels, scale, block_rows: int):
+    R, C = levels.shape
+    nb = R // block_rows
+    lb = levels.reshape(nb, block_rows, C).astype(jnp.float32)
+    return (lb * scale[:, None, None]).reshape(R, C)

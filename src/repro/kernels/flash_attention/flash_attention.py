@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: causal GQA flash attention (online softmax).
+
+Grid (B, H, num_q_blocks, num_kv_blocks); the kv dim is the innermost
+(sequential) grid axis, so the (m, l, acc) running statistics live in VMEM
+scratch across kv steps.  Upper-triangle kv blocks are skipped with
+``pl.when`` — the kernel does ~half the FLOPs of the masked-dense XLA path
+(this is the compute-term win recorded in EXPERIMENTS.md §Perf).
+
+Tiling: q/k blocks default 128 (MXU-aligned); head_dim is the lane dim and
+should be a multiple of 128 for peak MXU utilization on real hardware
+(EXPERIMENTS.md notes the dh=64 archs run at half-lane occupancy).
+Supports sliding-window causal masks (gemma local layers) and gemma-style
+score soft-capping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bq: int, bk: int, nk: int, window: int,
+            cap: float):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causality: kv block j overlaps q block i iff j*bk <= i*bq + bq - 1.
+    # (With bq == bk this is j <= i.)  Window: kv block must reach above
+    # q_lo - window.
+    q_lo = i * bq
+    q_hi = q_lo + bq - 1
+    k_lo = j * bk
+    k_hi = k_lo + bk - 1
+    live = k_lo <= q_hi
+    if window:
+        live &= k_hi > (q_lo - window)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)          # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if cap:
+            s = cap * jnp.tanh(s / cap)
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = qpos >= kpos
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot(p.astype(v.dtype), v))
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        l = l_ref[...]
+        l = jnp.where(l == 0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, window: int = 0, cap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: [B, H, Sq, D]; k/v: [B, KV, Sk, D]; returns [B, H, Sq, D].
+    Causal; q positions are aligned to the END of the kv sequence
+    (Sq == Sk for training/prefill)."""
+    B, H, Sq, D = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    nq, nk = Sq // bq, Sk // bk
+    scale = 1.0 / np.sqrt(D)
+    kernel = functools.partial(_kernel, scale=scale, bq=bq, bk=bk, nk=nk,
+                               window=window, cap=cap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,29 @@
+"""jit'd wrapper: model layout [B, S, H, D] <-> kernel layout [B, H, S, D].
+
+``attention(..., backend="pallas"|"xla")``: the Pallas kernel is the TPU
+deployment path (validated in interpret mode on CPU); the XLA path is the
+chunked online-softmax in ``repro.models.attention`` (also the oracle's
+basis) used for dry-run lowering.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.models.attention import chunked_attention
+
+
+def attention(q, k, v, *, window: int = 0, cap: float = 0.0,
+              backend: str = "xla", block_q: int = 128, block_k: int = 128,
+              interpret: bool = True):
+    """q: [B, S, H, D]; k/v: [B, S, KV, D] (model layout).  Causal."""
+    if backend == "xla":
+        return chunked_attention(q, k, v, window=window, cap=cap)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    ot = flash_attention(qt, kt, vt, window=window, cap=cap,
+                         block_q=block_q, block_k=block_k,
+                         interpret=interpret)
+    return jnp.swapaxes(ot, 1, 2)

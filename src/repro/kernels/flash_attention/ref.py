@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the causal (windowed, soft-capped) GQA flash kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, window: int = 0, cap: float = 0.0):
+    """q: [B, H, Sq, D]; k/v: [B, KV, Sk, D]; causal.  f32 math."""
+    B, H, Sq, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = 1.0 / np.sqrt(D)
+    qg = q.reshape(B, KV, G, Sq, D).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, D).astype(q.dtype)

@@ -1,0 +1,256 @@
+"""Static analyzer for post-SPMD HLO text: loop-aware FLOPs / collective
+bytes / memory traffic.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE, which makes it
+useless for scan-over-layers programs (every layer lives in a loop body).
+This module parses ``compiled.as_text()`` into a computation call graph,
+extracts per-computation costs, and propagates them with multipliers:
+
+  while body/cond   x trip count — read from the while op's
+                    backend_config known_trip_count (XLA emits it for
+                    scan-derived loops); fallback: largest int constant in
+                    the condition computation.
+  fusion / call / conditional branches   x 1
+
+Costs per computation:
+  * dot FLOPs       2 x prod(result dims) x contracted size; contracted
+                    dims resolved through a per-computation symbol table
+                    (operand result types).
+  * collective wire bytes per kind (shapes in SPMD HLO are local/per-chip):
+        all-reduce 2x | all-gather 1x out | reduce-scatter 1x operand |
+        all-to-all 1x | collective-permute 1x
+  * memory traffic  sum of operand+result bytes of top-level (non-fused)
+                    ops — an approximation of HBM traffic after fusion.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_RESULT_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*[a-z][\w\-]*\(")
+_TRIP_RE = re.compile(r'known_trip_count.*?"n":"(\d+)"')
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def _dims_prod(dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shapes_bytes(text: str) -> int:
+    return sum(_dims_prod(dims) * _DTYPE_BYTES[dt]
+               for dt, dims in _SHAPE_RE.findall(text)
+               if dt in _DTYPE_BYTES)
+
+
+MODEL_AXIS_SIZE = 16   # the minor mesh axis in both production meshes
+
+
+def _group_stride(line: str):
+    """First within-group device-id stride of a collective's replica groups.
+    Handles explicit ``{{0,16,...},...}`` lists and iota form
+    ``[G,N]<=[dims]T(perm)`` (reconstructed with numpy)."""
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",") if x]
+        return (ids[1] - ids[0]) if len(ids) > 1 else 0
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\]"
+                  r"(?:T\(([\d,]+)\))?", line)
+    if m:
+        import numpy as _np
+        G, N = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",")]
+        ids = _np.arange(int(_np.prod(dims)))
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",")]
+            ids = ids.reshape(dims).transpose(perm).reshape(-1)
+        ids = ids.reshape(G, N)
+        return int(ids[0, 1] - ids[0, 0]) if N > 1 else 0
+    return None
+
+
+def _group_class(line: str) -> str:
+    """Classify a collective: "contig" = within-(sub)model-axis groups
+    (stride < MODEL_AXIS_SIZE), "strided" = data/pod-axis groups.  Exact for
+    our (data=16, model=16) / (pod=2, data=16, model=16) meshes, including
+    Shardy's partial sub-axis shardings (e.g. kv-heads over 4 of 16)."""
+    stride = _group_stride(line)
+    if stride is None:
+        return "unknown"
+    return "contig" if 0 <= stride < MODEL_AXIS_SIZE else "strided"
+
+
+class Computation:
+    __slots__ = ("name", "dot_flops", "coll", "coll_counts", "mem_bytes",
+                 "while_calls", "plain_calls", "max_const", "coll_by_class")
+
+    def __init__(self, name):
+        self.name = name
+        self.dot_flops = 0.0
+        self.coll = dict.fromkeys(COLL_KINDS, 0.0)
+        self.coll_counts = dict.fromkeys(COLL_KINDS, 0)
+        self.coll_by_class = {"contig": 0.0, "strided": 0.0, "unknown": 0.0}
+        self.mem_bytes = 0.0
+        self.while_calls: List[tuple] = []    # (body, cond, trip or None)
+        self.plain_calls: List[str] = []
+        self.max_const = 0
+
+
+_SKIP_MEM = ("parameter(", "constant(", "get-tuple-element", "tuple(",
+             "bitcast(", "bitcast-convert(", "after-all(", "partition-id(")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur = None
+    symtab: Dict[str, str] = {}
+    entry = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and (" -> " in line or line.startswith("ENTRY")):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", line)
+            name = m.group(1) if m else f"anon{len(comps)}"
+            cur = Computation(name)
+            comps[name] = cur
+            symtab = {}
+            if line.startswith("ENTRY"):
+                entry = name
+                # ENTRY header carries param shapes inline: record them.
+                for pm in re.finditer(r"([\w.\-]+):\s*((?:\w+\[[\d,]*\]))",
+                                      line):
+                    symtab[pm.group(1)] = pm.group(2)
+            continue
+        if line == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        rm = _RESULT_RE.match(line)
+        if rm:
+            symtab[rm.group(1)] = rm.group(2).strip()
+        for c in _CONST_INT.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+        # --- dot flops -----------------------------------------------------
+        dm = re.search(r"=\s*(\S+(?:\[[\d,]*\])?\S*)\s+dot\(([^)]*)\)", line)
+        if dm:
+            res_shapes = _SHAPE_RE.findall(dm.group(1))
+            out_elems = sum(_dims_prod(d) for _, d in res_shapes) or 1
+            operands = [o.strip().lstrip("%") for o in dm.group(2).split(",")]
+            contracted = 1
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            if cm and operands:
+                lhs_type = symtab.get(operands[0], "")
+                lm = _SHAPE_RE.search(lhs_type)
+                if lm:
+                    lhs_dims = [int(d) for d in lm.group(2).split(",") if d]
+                    for cd in cm.group(1).split(","):
+                        if cd and int(cd) < len(lhs_dims):
+                            contracted *= lhs_dims[int(cd)]
+            cur.dot_flops += 2.0 * out_elems * contracted
+        # --- collectives ---------------------------------------------------
+        # Result may be a TUPLE — XLA's all-reduce combiner batches many
+        # small reductions into one op: `%x = (f16[..], f16[..]) all-reduce(`.
+        for kind in COLL_KINDS:
+            cm = re.search(rf"=\s*(\([^()]*\)|\S+)\s+{kind}(?:-start)?\(",
+                           line)
+            if cm:
+                b = _shapes_bytes(cm.group(1))
+                if kind == "all-reduce":
+                    b *= 2
+                elif kind == "reduce-scatter":
+                    ops = [o.strip().lstrip("%")
+                           for o in line.split("(", 1)[1].split(")")[0].split(",")]
+                    if ops and ops[0] in symtab:
+                        b = max(b, _shapes_bytes(symtab[ops[0]]))
+                cur.coll[kind] += b
+                cur.coll_counts[kind] += 1
+                cur.coll_by_class[_group_class(line)] += b
+        # --- call graph ----------------------------------------------------
+        if " while(" in line:
+            mb = re.search(r"body=%?([\w.\-]+)", line)
+            mc = re.search(r"condition=%?([\w.\-]+)", line)
+            mt = _TRIP_RE.search(line)
+            if mb and mc:
+                cur.while_calls.append(
+                    (mb.group(1), mc.group(1),
+                     int(mt.group(1)) if mt else None))
+        else:
+            for attr in ("calls", "to_apply", "branch_computations",
+                         "true_computation", "false_computation"):
+                for grp in re.finditer(rf"{attr}=\{{?%?([\w.\-, %]+?)\}}?[,\s]",
+                                       line):
+                    for nm in re.split(r",\s*", grp.group(1)):
+                        cur.plain_calls.append(nm.strip().lstrip("%"))
+        # --- memory traffic -------------------------------------------------
+        if rm and not any(k in line for k in _SKIP_MEM):
+            cur.mem_bytes += _shapes_bytes(line)
+    comps["__entry__"] = comps.get(entry) or next(iter(comps.values()))
+    return comps
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps = parse_hlo(text)
+    entry = comps["__entry__"]
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def cost_of(name: str, depth=0) -> Dict[str, float]:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        zero = {"flops": 0.0, "mem": 0.0,
+                "cls:contig": 0.0, "cls:strided": 0.0, "cls:unknown": 0.0,
+                **{f"coll:{k}": 0.0 for k in COLL_KINDS},
+                **{f"cnt:{k}": 0.0 for k in COLL_KINDS}}
+        if c is None or depth > 128:
+            return zero
+        memo[name] = dict(zero)  # cycle guard
+        total = dict(zero)
+        total["flops"] += c.dot_flops
+        total["mem"] += c.mem_bytes
+        for cl, v in c.coll_by_class.items():
+            total[f"cls:{cl}"] += v
+        for k in COLL_KINDS:
+            total[f"coll:{k}"] += c.coll[k]
+            total[f"cnt:{k}"] += c.coll_counts[k]
+        for callee in c.plain_calls:
+            sub = cost_of(callee, depth + 1)
+            for k in total:
+                total[k] += sub[k]
+        for body, cond, trip in c.while_calls:
+            if trip is None:
+                trip = max(comps.get(cond, Computation("")).max_const, 1)
+            sub_b = cost_of(body, depth + 1)
+            sub_c = cost_of(cond, depth + 1)
+            for k in total:
+                total[k] += trip * (sub_b[k] + sub_c[k])
+        memo[name] = total
+        return total
+
+    total = cost_of(entry.name)
+    out = {
+        "flops_per_chip": total["flops"],
+        "mem_bytes_per_chip": total["mem"],
+        "wire_bytes_per_chip": sum(total[f"coll:{k}"] for k in COLL_KINDS),
+    }
+    for k in COLL_KINDS:
+        out[f"wire_{k}"] = total[f"coll:{k}"]
+        out[f"count_{k}"] = total[f"cnt:{k}"]
+    # model axis = contiguous groups; data/pod axes = strided groups
+    out["wire_model_axis"] = total["cls:contig"]
+    out["wire_data_axis"] = total["cls:strided"] + total["cls:unknown"]
+    return out

@@ -1,0 +1,44 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def _tok_shape(cfg: ModelConfig, B: int, S: int):
+    if cfg.n_codebooks:
+        return (B, S, cfg.n_codebooks)
+    return (B, S)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape):
+    """Batch pytree of ShapeDtypeStructs for the given input shape."""
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {
+            "tokens": sds(_tok_shape(cfg, B, S), jnp.int32),
+            "labels": sds(_tok_shape(cfg, B, S), jnp.int32),
+        }
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((B, cfg.n_img_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds(_tok_shape(cfg, B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((B, cfg.n_img_tokens, cfg.d_model),
+                                        jnp.bfloat16)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": sds(_tok_shape(cfg, B, 1), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def abstract_cache(cfg: ModelConfig, shape: InputShape, ctx,
+                   dtype=jnp.bfloat16):
+    from repro.models.model import init_cache
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len, ctx, dtype))

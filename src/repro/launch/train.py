@@ -1,0 +1,108 @@
+"""Production training launcher.
+
+    # on a real pod slice (or with forced host devices for a dry run):
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --mesh debug --steps 20 --flecs
+
+    --mesh production  : 16x16 (requires 256 devices)
+    --mesh multi       : 2x16x16 (512 devices)
+    --mesh debug       : smallest mesh that fits the local device count
+Builds the mesh, shards params/optimizer per repro.launch.sharding, and
+runs the standard or FLECS-CGD trainer on a synthetic heterogeneous token
+stream (swap `stream` for a real data pipeline in deployment).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.launch.sharding import batch_specs, named_shardings, param_specs
+from repro.models.context import ModelContext
+from repro.models.model import init_params
+from repro.optim.optimizers import get_optimizer
+from repro.train.step import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--mesh", choices=["production", "multi", "debug"],
+                    default="debug")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--flecs", action="store_true")
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    if args.mesh == "debug":
+        n = len(jax.devices())
+        dm = 2 if n % 2 == 0 and n > 1 else 1
+        mesh = make_debug_mesh((max(n // dm, 1), dm), ("data", "model"))
+        data_axes = ("data",)
+    else:
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        data_axes = ("pod", "data") if args.mesh == "multi" else ("data",)
+    print(f"mesh: {dict(mesh.shape)}")
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    ctx = ModelContext(mesh=mesh, data_axes=data_axes, moe_impl="sorted"
+                       if mesh.shape["model"] > 1 and cfg.moe else "ref",
+                       remat=True)
+    params = init_params(cfg, jax.random.key(0), jnp.float32)
+    rng = np.random.default_rng(0)
+
+    def batch():
+        t = rng.integers(0, cfg.vocab, (args.batch, args.seq + 1))
+        return {"tokens": jnp.asarray(t[:, :-1], jnp.int32),
+                "labels": jnp.asarray(t[:, 1:], jnp.int32)}
+
+    b0 = batch()
+    pa, ba = jax.eval_shape(lambda: params), jax.eval_shape(lambda: b0)
+    pshard = named_shardings(pa, mesh)
+    bshard = named_shardings(ba, mesh, batch_specs(ba, mesh, data_axes))
+    params = jax.device_put(params, pshard)
+
+    if args.flecs:
+        from repro.core.dl_flecs import FlecsDLConfig, make_flecs_train_step
+        lower = make_flecs_train_step(cfg, ctx, FlecsDLConfig(alpha=args.lr * 30))
+        jitted, shifts_abs = lower.build(pa, ba, pshard, bshard)
+        shifts = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
+                              shifts_abs)
+        t0 = time.time()
+        for i in range(args.steps):
+            params, shifts, m = jitted(params, shifts, batch(), jnp.int32(i))
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss {float(m['loss']):.4f}")
+    else:
+        opt = get_optimizer(args.optimizer, args.lr)
+        opt_state = jax.device_put(
+            opt.init(params),
+            named_shardings(jax.eval_shape(opt.init, pa), mesh))
+        step = jax.jit(make_train_step(cfg, ctx, opt,
+                                       microbatches=args.microbatches),
+                       in_shardings=(pshard, None, bshard))
+        for i in range(args.steps):
+            params, opt_state, m = step(params, opt_state, batch())
+            if i % 5 == 0 or i == args.steps - 1:
+                print(f"step {i:4d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.3f}")
+
+    if args.checkpoint:
+        from repro.checkpoint.store import save
+        save(args.checkpoint, params, step=args.steps)
+        print("saved", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.models.context import CPU_CTX, ModelContext
+from repro.models.model import (abstract_params, decode_step, forward,
+                                head_logits, init_cache, init_params, prefill)
+
+__all__ = ["CPU_CTX", "ModelContext", "abstract_params", "decode_step",
+           "forward", "head_logits", "init_cache", "init_params", "prefill"]

@@ -1,0 +1,247 @@
+"""Memory-safe attention: chunked online-softmax (train/prefill) + cached decode.
+
+The chunked pure-JAX implementation is both the lowering path for dry-runs
+(it never materializes an [Sq, Sk] score tensor) and the numerical oracle for
+the Pallas flash-attention kernel in ``repro.kernels.flash_attention``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import apply_rope, softcap
+
+NEG = -1e30
+
+
+def _online_block(qc, kc, vc, qpos, kpos, m, l, acc, *, scale, window, cap):
+    """One online-softmax step.  qc: [B,cq,KV,G,Dk]; kc: [B,ck,KV,Dk]."""
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qc.astype(jnp.float32),
+                   kc.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    mask = qpos[:, None] >= kpos[None, :]                      # causal
+    if window:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, :, None, None, :], s, NEG)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bqhgk,bkhd->bqhgd", p, vc.astype(jnp.float32))
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(q, k, v, *, window=0, cap=0.0, q_offset=0,
+                      chunk_q=512, chunk_k=1024):
+    """Causal (optionally sliding-window) attention.
+
+    q: [B, Sq, H, Dk]; k: [B, Sk, KV, Dk]; v: [B, Sk, KV, Dv].
+    Returns [B, Sq, H, Dv].  H must be a multiple of KV (GQA).
+    """
+    B, Sq, H, Dk = q.shape
+    _, Sk, KV, Dv = v.shape
+    G = H // KV
+    scale = 1.0 / np.sqrt(Dk)
+    qg = q.reshape(B, Sq, KV, G, Dk)
+
+    # Dense fallback for small problems (smoke tests / short decode segments).
+    if Sq <= chunk_q or Sq % chunk_q or Sk % chunk_k:
+        qpos = q_offset + jnp.arange(Sq)
+        kpos = jnp.arange(Sk)
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        s = softcap(s, cap)
+        mask = qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask[None, :, None, None, :], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+        return out.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+    nq = Sq // chunk_q
+    qch = qg.reshape(B, nq, chunk_q, KV, G, Dk).transpose(1, 0, 2, 3, 4, 5)
+
+    if window and window < Sk:
+        # Banded gather: each q chunk attends to a static-width K band.
+        band = int(np.ceil((chunk_q + window) / chunk_k) + 1) * chunk_k
+        band = min(band, Sk)
+
+        def per_q(args):
+            i, qc = args
+            qpos = q_offset + i * chunk_q + jnp.arange(chunk_q)
+            start = jnp.clip(i * chunk_q + chunk_q - band, 0, Sk - band)
+            kc = jax.lax.dynamic_slice_in_dim(k, start, band, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, start, band, axis=1)
+            kpos = start + jnp.arange(band)
+            m = jnp.full((B, chunk_q, KV, G), NEG, jnp.float32)
+            l = jnp.zeros((B, chunk_q, KV, G), jnp.float32)
+            acc = jnp.zeros((B, chunk_q, KV, G, Dv), jnp.float32)
+            m, l, acc = _online_block(qc, kc, vc, qpos, kpos, m, l, acc,
+                                      scale=scale, window=window, cap=cap)
+            return acc / l[..., None]
+
+        out = jax.lax.map(per_q, (jnp.arange(nq), qch))
+    else:
+        nk = Sk // chunk_k
+        kch = k.reshape(B, nk, chunk_k, KV, Dk).transpose(1, 0, 2, 3, 4)
+        vch = v.reshape(B, nk, chunk_k, KV, Dv).transpose(1, 0, 2, 3, 4)
+
+        def per_q(args):
+            i, qc = args
+            qpos = q_offset + i * chunk_q + jnp.arange(chunk_q)
+
+            def kv_step(carry, kv):
+                m, l, acc = carry
+                j, kc, vc = kv
+                kpos = j * chunk_k + jnp.arange(chunk_k)
+                return _online_block(qc, kc, vc, qpos, kpos, m, l, acc,
+                                     scale=scale, window=window, cap=cap), None
+
+            m = jnp.full((B, chunk_q, KV, G), NEG, jnp.float32)
+            l = jnp.zeros((B, chunk_q, KV, G), jnp.float32)
+            acc = jnp.zeros((B, chunk_q, KV, G, Dv), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m, l, acc), (jnp.arange(nk), kch, vch))
+            return acc / l[..., None]
+
+        out = jax.lax.map(per_q, (jnp.arange(nq), qch))
+
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def attend_cache(q, k_cache, v_cache, n_valid, *, cap=0.0, axis_name=None):
+    """Single-step decode attention against a cache.
+
+    q: [B, H, Dk]; k_cache: [B, S, KV, Dk]; v_cache: [B, S, KV, Dv];
+    n_valid: number of valid slots (scalar) — slots ``>= n_valid`` are masked.
+    If ``axis_name`` is set, the cache is sequence-sharded along that mesh
+    axis and partial softmax stats are combined with collectives
+    (flash-decode).  Returns [B, H, Dv].
+    """
+    B, S, KV, Dk = k_cache.shape
+    Dv = v_cache.shape[-1]
+    H = q.shape[1]
+    G = H // KV
+    scale = 1.0 / np.sqrt(Dk)
+    qg = q.reshape(B, KV, G, Dk).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32)) * scale
+    s = softcap(s, cap)
+    if axis_name is None:
+        valid = jnp.arange(S) < n_valid
+    else:
+        axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
+        shard = jnp.zeros((), jnp.int32)
+        for a in axes:
+            shard = shard * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        valid = (shard * S + jnp.arange(S)) < n_valid
+    s = jnp.where(valid[None, None, None, :], s, NEG)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    if axis_name is not None:
+        M = jax.lax.pmax(m, axis_name)
+        corr = jnp.exp(m - M)
+        l = jax.lax.psum(l * corr, axis_name)
+        acc = jax.lax.psum(acc * corr[..., None], axis_name)
+    out = acc / l[..., None]
+    return out.reshape(B, H, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full GQA attention sub-layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg, dtype):
+    D, H, KV, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / np.sqrt(D)
+    so = 1.0 / np.sqrt(H * Dh)
+    return {
+        "wq": (jax.random.normal(ks[0], (D, H, Dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (D, KV, Dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (D, KV, Dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H, Dh, D)) * so).astype(dtype),
+    }
+
+
+def attn_forward(params, x, cfg, *, window=0, positions=None):
+    """Full-sequence causal attention sub-layer.  x: [B, S, D]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_base)
+    k = apply_rope(k, positions, cfg.rope_base)
+    o = chunked_attention(q, k, v, window=window, cap=cfg.attn_softcap)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+
+
+def attn_decode(params, x, cache, pos, cfg, *, window=0, ctx=None,
+                seq_shard=False):
+    """One-token decode.  x: [B, 1, D]; cache: {"k","v": [B, S, KV, Dh]}.
+
+    Global layers: slot = pos.  Local layers use a ring buffer of size
+    window: slot = pos % window (rope applied before caching, so slot order
+    does not matter for scores).
+
+    With ``seq_shard`` (long_500k, batch=1) the cache sequence dim is sharded
+    over the data axes; the cache update + partial-softmax combine run in a
+    partial-manual ``shard_map`` (model axis stays auto for head sharding).
+    """
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posb, cfg.rope_base)
+    k = apply_rope(k, posb, cfg.rope_base)
+    S = cache["k"].shape[1]
+    slot = (pos % S).astype(jnp.int32) if window else pos.astype(jnp.int32)
+    if not (seq_shard and ctx is not None and ctx.mesh is not None):
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, 1)
+        new_cache = {"k": k_cache, "v": v_cache}
+        n_valid = jnp.minimum(pos + 1, S) if window else pos + 1
+        o = attend_cache(q[:, 0], k_cache, v_cache, n_valid,
+                         cap=cfg.attn_softcap)
+    else:
+        axes = ctx.data_axes
+        P = jax.sharding.PartitionSpec
+        cache_spec = P(None, axes, None, None)
+
+        def inner(kc, vc, k1, v1, q1, pos_):
+            # kc/vc: local shard [B, S_loc, KV, dh]
+            S_loc = kc.shape[1]
+            shard = jnp.zeros((), jnp.int32)
+            for a in axes:
+                shard = shard * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            local_slot = pos_.astype(jnp.int32) - shard * S_loc
+            in_range = (local_slot >= 0) & (local_slot < S_loc)
+            ls = jnp.clip(local_slot, 0, S_loc - 1)
+            k_upd = jax.lax.dynamic_update_slice_in_dim(kc, k1, ls, 1)
+            v_upd = jax.lax.dynamic_update_slice_in_dim(vc, v1, ls, 1)
+            kc = jnp.where(in_range, k_upd, kc)
+            vc = jnp.where(in_range, v_upd, vc)
+            o = attend_cache(q1[:, 0], kc, vc, pos_ + 1,
+                             cap=cfg.attn_softcap,
+                             axis_name=axes if len(axes) > 1 else axes[0])
+            return o, kc, vc
+
+        o, k_cache, v_cache = jax.shard_map(
+            inner, mesh=ctx.mesh,
+            in_specs=(cache_spec, cache_spec, P(), P(), P(), P()),
+            out_specs=(P(), cache_spec, cache_spec),
+            axis_names=set(axes), check_vma=False,
+        )(cache["k"], cache["v"], k, v, q, pos)
+        new_cache = {"k": k_cache, "v": v_cache}
+    out = jnp.einsum("bhk,hkd->bd", o, params["wo"])[:, None, :]
+    return out, new_cache

@@ -1,0 +1,42 @@
+"""Execution context threading mesh/parallelism choices through the model."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelContext:
+    """How to execute a model graph.
+
+    mesh            — jax Mesh (None => single-device semantics everywhere).
+    data_axes       — mesh axes sharding batch/tokens (("pod","data") multi-pod).
+    model_axis      — mesh axis for tensor/expert parallelism.
+    moe_impl        — "ref" (exact dropless gather) | "sorted" (a2a expert par).
+    seq_shard_decode— shard decode KV caches over data_axes (flash-decode);
+                      used for long_500k where batch=1 leaves data idle.
+    remat           — activation checkpointing per scanned block.
+    """
+    mesh: Optional[object] = None
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    moe_impl: str = "ref"
+    moe_gather_quant: bool = False   # int8-quantized ZeRO-3 expert gather
+    seq_shard_decode: bool = False
+    remat: bool = False
+
+    @property
+    def n_data(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(
+            __import__("numpy").prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    @property
+    def n_model(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+
+CPU_CTX = ModelContext()

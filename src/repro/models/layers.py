@@ -1,0 +1,85 @@
+"""Shared neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return ((1.0 + scale.astype(jnp.float32)) * out).astype(x.dtype)
+
+
+def softcap(x, cap):
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def act_fn(name):
+    return {"silu": jax.nn.silu, "gelu": lambda v: jax.nn.gelu(v, approximate=True)}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, base: float):
+    half = head_dim // 2
+    return 1.0 / (base ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, base: float):
+    """x: [..., S, H, dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    inv = jnp.asarray(rope_freqs(dh, base))
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]                       # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (mamba2 / RG-LRU temporal conv)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x: [B, S, C]; w: [K, C].
+
+    If ``state`` is given ([B, K-1, C], the trailing inputs of the previous
+    segment) a single/step-wise decode is supported; returns (y, new_state).
+    """
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:-2] + (K - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, x], axis=-2)               # [B, S+K-1, C]
+    y = sum(xp[..., i:i + x.shape[-2], :] * w[i] for i in range(K))
+    new_state = xp[..., -(K - 1):, :]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Dense (gated) FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d_model)
+    s_out = 1.0 / np.sqrt(d_ff)
+    return {
+        "w_gate": (jax.random.normal(k1, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k2, (d_model, d_ff)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k3, (d_ff, d_model)) * s_out).astype(dtype),
+    }
+
+
+def ffn(params, x, act: str):
+    g = act_fn(act)(jnp.einsum("...d,df->...f", x, params["w_gate"]))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    return jnp.einsum("...f,fd->...d", g * u, params["w_down"])

@@ -1,0 +1,41 @@
+"""Cross-entropy LM loss, chunked over tokens so [T, V] logits for huge
+vocabs never materialize for the whole batch at once."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import head_logits
+
+
+def _ce(logits, labels):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return lse - gold
+
+
+def lm_loss(params, hidden, labels, cfg, *, mask=None, chunk=1024):
+    """hidden: [B,S,D]; labels: [B,S] (or [B,S,C] audio).  Mean CE."""
+    B, S, D = hidden.shape
+    T = B * S
+    h = hidden.reshape(T, D)
+    lab = labels.reshape(T, *labels.shape[2:])
+    m = jnp.ones((T,), jnp.float32) if mask is None else mask.reshape(T)
+    chunk = min(chunk, T)
+    if T % chunk:
+        chunk = T
+    nc = T // chunk
+
+    def body(carry, idx):
+        hs = jax.lax.dynamic_slice_in_dim(h, idx * chunk, chunk, 0)
+        ls = jax.lax.dynamic_slice_in_dim(lab, idx * chunk, chunk, 0)
+        ms = jax.lax.dynamic_slice_in_dim(m, idx * chunk, chunk, 0)
+        logits = head_logits(params, hs, cfg)
+        ce = _ce(logits, ls)
+        if ce.ndim > 1:                      # audio: mean over codebooks
+            ce = jnp.mean(ce, axis=-1)
+        return carry + jnp.sum(ce * ms), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(nc))
+    return total / jnp.maximum(jnp.sum(m), 1.0)

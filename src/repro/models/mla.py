@@ -1,0 +1,90 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+Cache = per-token compressed KV latent ``c_kv`` [B, S, r_kv] plus the shared
+rotary key ``k_rope`` [B, S, d_rope] — head-count independent, the paper's
+cache-compression trick.  Decode uses the *absorbed* formulation (queries
+folded into latent space); full-sequence uses naive expansion (better MXU
+utilization at prefill).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import NEG, chunked_attention
+from repro.models.layers import apply_rope, rms_norm
+
+
+def init_mla(key, cfg, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    s = lambda fan: 1.0 / np.sqrt(fan)
+    return {
+        "wq_a": (jax.random.normal(ks[0], (D, rq)) * s(D)).astype(dtype),
+        "q_norm": jnp.zeros((rq,), dtype),
+        "wq_b": (jax.random.normal(ks[1], (rq, H, dn + dr)) * s(rq)).astype(dtype),
+        "wkv_a": (jax.random.normal(ks[2], (D, rkv + dr)) * s(D)).astype(dtype),
+        "kv_norm": jnp.zeros((rkv,), dtype),
+        "wk_b": (jax.random.normal(ks[3], (rkv, H, dn)) * s(rkv)).astype(dtype),
+        "wv_b": (jax.random.normal(ks[4], (rkv, H, dv)) * s(rkv)).astype(dtype),
+        "wo": (jax.random.normal(ks[5], (H, dv, D)) * s(H * dv)).astype(dtype),
+    }
+
+
+def _latents(params, x, cfg, positions):
+    """Project x -> (q_nope, q_rope, c_kv, k_rope)."""
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q_lat = rms_norm(jnp.einsum("bsd,dr->bsr", x, params["wq_a"]),
+                     params["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, params["wq_b"])
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_base)
+    kv = jnp.einsum("bsd,dr->bsr", x, params["wkv_a"])
+    c_kv = rms_norm(kv[..., :cfg.kv_lora_rank], params["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(kv[..., None, cfg.kv_lora_rank:], positions,
+                        cfg.rope_base)[..., 0, :]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(params, x, cfg, *, positions=None):
+    """Full-sequence MLA (naive expansion).  x: [B, S, D]."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :].astype(jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _latents(params, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["wk_b"])
+    v = jnp.einsum("bsr,rhv->bshv", c_kv, params["wv_b"])
+    H = cfg.n_heads
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    o = chunked_attention(q, k, v)
+    return jnp.einsum("bshv,hvd->bsd", o, params["wo"])
+
+
+def mla_decode(params, x, cache, pos, cfg):
+    """Absorbed one-token decode.  cache: {"c_kv": [B,S,r], "k_rope": [B,S,dr]}."""
+    B = x.shape[0]
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _latents(params, x, cfg, posb)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv_new, pos, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope_new,
+                                                 pos, 1)
+    # Absorb wk_b into the query: q_lat[b,h,r] = q_nope . wk_b
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], params["wk_b"])
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                    c_kv.astype(jnp.float32))
+         + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0].astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    S = c_kv.shape[1]
+    s = jnp.where((jnp.arange(S) <= pos)[None, None, :], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", p, c_kv.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", o_lat.astype(x.dtype), params["wv_b"])
+    out = jnp.einsum("bhv,hvd->bd", o, params["wo"])[:, None, :]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,276 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two execution paths with identical routing semantics:
+
+* ``moe_ref``     — exact, dropless, per-token weight gather. O(T·k·D·F)
+                    memory; used for smoke tests and as the correctness
+                    oracle for the sharded path.
+* ``moe_sorted``  — production path: token copies sorted by destination
+                    expert, equal-split ``all_to_all`` over the expert-owner
+                    mesh axis, grouped (batched) matmul per local expert,
+                    inverse route + weighted combine.  Capacity-bounded
+                    (tokens over capacity are dropped, as in Switch/GShard).
+
+Router aux (load-balance) loss follows Switch: E * sum(fraction_e * prob_e).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import act_fn
+
+
+def init_moe(key, cfg, dtype):
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.n_experts, m.d_ff
+    ks = jax.random.split(key, 5)
+    s_in, s_out = 1.0 / np.sqrt(D), 1.0 / np.sqrt(F)
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (E, D, F)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (E, D, F)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (E, F, D)) * s_out).astype(dtype),
+    }
+    if m.n_shared:
+        from repro.models.layers import init_ffn
+        p["shared"] = init_ffn(ks[4], D, m.d_ff * m.n_shared, dtype)
+    return p
+
+
+def _route(params, x, cfg):
+    """x: [T, D] -> (weights [T,k], ids [T,k], aux_loss scalar)."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    # Switch-style load balance aux.
+    frac = jnp.mean(jax.nn.one_hot(ids[:, 0], m.n_experts), axis=0)
+    aux = m.n_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return w.astype(x.dtype), ids, aux
+
+
+def _expert_mlp(xs, wg, wu, wd, act):
+    """xs: [E, C, D]; w*: [E, D, F] / [E, F, D]."""
+    g = act_fn(act)(jnp.einsum("ecd,edf->ecf", xs, wg))
+    u = jnp.einsum("ecd,edf->ecf", xs, wu)
+    return jnp.einsum("ecf,efd->ecd", g * u, wd)
+
+
+def moe_ref(params, x, cfg):
+    """Exact dropless reference.  x: [..., D] -> ([..., D], aux)."""
+    m = cfg.moe
+    shape = x.shape
+    xt = x.reshape(-1, shape[-1])
+    w, ids, aux = _route(params, xt, cfg)
+    wg = params["w_gate"][ids]          # [T, k, D, F]
+    wu = params["w_up"][ids]
+    wd = params["w_down"][ids]
+    g = act_fn(cfg.act)(jnp.einsum("td,tkdf->tkf", xt, wg))
+    u = jnp.einsum("td,tkdf->tkf", xt, wu)
+    y = jnp.einsum("tkf,tkfd->tkd", g * u, wd)
+    out = jnp.einsum("tkd,tk->td", y, w.astype(jnp.float32).astype(y.dtype))
+    # NOTE: shared experts are applied by the caller (outside any shard_map).
+    return out.reshape(shape), aux
+
+
+def _rank_in_group(group_ids, n_groups):
+    """Stable rank of each element within its group.  group_ids: [N] ints."""
+    one_hot = jax.nn.one_hot(group_ids, n_groups, dtype=jnp.int32)   # [N, G]
+    rank = jnp.cumsum(one_hot, axis=0) - 1                            # [N, G]
+    return jnp.take_along_axis(rank, group_ids[:, None], axis=1)[:, 0]
+
+
+def moe_sorted(params, x, cfg, *, axis_name, n_shards, gather_axis=None,
+               aux_axes=None, gather_quant=False):
+    """Expert-parallel MoE inside ``shard_map``.
+
+    x: [T_loc, D] (local tokens).  Expert weights arrive as the LOCAL shard
+    [E_loc, D_loc, F] — leading expert dim sharded over ``axis_name``; if
+    ``gather_axis`` is given the D dim is FSDP-sharded over it and is
+    all-gathered here (ZeRO-3 gather-on-use).
+    """
+    m = cfg.moe
+    T, D = x.shape
+    E = m.n_experts
+    E_loc = E // n_shards
+    k = m.top_k
+    wg, wu, wd = params["w_gate"], params["w_up"], params["w_down"]
+    if gather_axis is not None and wg.shape[1] != D:
+        if gather_quant:
+            # Beyond-paper (EXPERIMENTS.md §Perf): apply the paper's own
+            # quantize-what-you-communicate idea to the ZeRO-3 expert
+            # gather — int8 levels + per-(expert, out-column) f32 scales
+            # (taken over the CONTRACTION axis, so each matmul column sees
+            # its own grid) halve the all-gather wire vs bf16.
+            # Deterministic rounding: weights, not gradients — no
+            # unbiasedness requirement; per-element error <= scale/2.
+            def q_gather(w, axis):
+                # per-(expert, out-column, SHARD) scale: max over the local
+                # slice of the contraction dim
+                scale = jnp.max(jnp.abs(w.astype(jnp.float32)),
+                                axis=axis, keepdims=True) / 127.0
+                scale = jnp.where(scale == 0, 1.0, scale)
+                lv = jnp.clip(jnp.round(w.astype(jnp.float32) / scale),
+                              -127, 127).astype(jnp.int8)
+                lv = jax.lax.all_gather(lv, gather_axis, axis=axis,
+                                        tiled=True)
+                # scales gathered UNtiled: [n_shards, E, 1, F]-like; each
+                # shard's block of the gathered levels uses its own scale.
+                sc = jax.lax.all_gather(scale, gather_axis, axis=0,
+                                        tiled=False)
+                n_sh = sc.shape[0]
+                blk = lv.shape[axis] // n_sh
+                shp = list(lv.shape)
+                shp[axis:axis + 1] = [n_sh, blk]
+                lvb = lv.reshape(shp).astype(jnp.float32)
+                # scb: the keepdims-1 contraction slot becomes the blk dim
+                scb = jnp.moveaxis(sc, 0, axis)   # [..., n_sh, 1(blk), ...]
+                out = lvb * scb
+                return out.reshape(lv.shape).astype(w.dtype)
+
+            wg = q_gather(wg, 1)
+            wu = q_gather(wu, 1)
+            wd = q_gather(wd, 2)
+        else:
+            wg = jax.lax.all_gather(wg, gather_axis, axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, gather_axis, axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, gather_axis, axis=2, tiled=True)
+    params = dict(params, w_gate=wg, w_up=wu, w_down=wd)
+    w, ids, aux = _route_sharded(params, x, cfg, axis_name)
+
+    TK = T * k
+    flat_ids = ids.reshape(TK)                       # global expert id / copy
+    flat_w = w.reshape(TK)
+    copy_tok = jnp.repeat(jnp.arange(T), k)
+    dest = flat_ids // E_loc                         # owning shard
+
+    cap_send = int(np.ceil(TK / n_shards * m.capacity_factor))
+    rank = _rank_in_group(dest, n_shards)
+    keep = rank < cap_send
+    # Scatter copies into the per-destination send buffer.
+    send_x = jnp.zeros((n_shards, cap_send, D), x.dtype)
+    send_eid = jnp.full((n_shards, cap_send), -1, jnp.int32)   # local expert id
+    rr = jnp.where(keep, rank, cap_send - 1)
+    dd = jnp.where(keep, dest, 0)
+    xk = jnp.where(keep[:, None], x[copy_tok], 0)
+    send_x = send_x.at[dd, rr].add(xk)               # add: drops collide benignly
+    send_eid = send_eid.at[dd, rr].max(
+        jnp.where(keep, flat_ids % E_loc, -1))
+    recv_x = jax.lax.all_to_all(send_x, axis_name, 0, 0, tiled=False)
+    recv_eid = jax.lax.all_to_all(send_eid, axis_name, 0, 0, tiled=False)
+    recv_x = recv_x.reshape(n_shards * cap_send, D)
+    recv_eid = recv_eid.reshape(n_shards * cap_send)
+
+    # Group received copies by local expert (slot -1 = padding -> dropped).
+    R = recv_x.shape[0]
+    cap_e = int(np.ceil(R / E_loc * m.capacity_factor))
+    valid = recv_eid >= 0
+    eid = jnp.where(valid, recv_eid, 0)
+    erank = _rank_in_group(jnp.where(valid, eid, E_loc), E_loc + 1)
+    ekeep = valid & (erank < cap_e)
+    er = jnp.where(ekeep, erank, cap_e - 1)
+    ee = jnp.where(ekeep, eid, 0)
+    xe = jnp.where(ekeep[:, None], recv_x, 0)
+    grouped = jnp.zeros((E_loc, cap_e, D), x.dtype).at[ee, er].add(xe)
+
+    ye = _expert_mlp(grouped, params["w_gate"], params["w_up"],
+                     params["w_down"], cfg.act)
+
+    # Inverse route: gather back to recv-slot order, a2a home, combine.
+    y_slots = jnp.where(ekeep[:, None], ye[ee, er], 0)
+    y_back = jax.lax.all_to_all(
+        y_slots.reshape(n_shards, cap_send, D), axis_name, 0, 0, tiled=False)
+    y_back = y_back.reshape(n_shards, cap_send, D)
+    y_copy = jnp.where(keep[:, None], y_back[dd, rr], 0)
+    out = jnp.zeros((T, D), jnp.float32).at[copy_tok].add(
+        y_copy.astype(jnp.float32) * flat_w.astype(jnp.float32)[:, None])
+    aux = jax.lax.pmean(aux, aux_axes if aux_axes is not None else axis_name)
+    return out.astype(x.dtype), aux
+
+
+def moe_fshard(params, x, cfg, *, model_axis, data_axes, n_model, n_data):
+    """Decode-layout expert parallelism (both mesh axis groups MANUAL).
+
+    Motivation (EXPERIMENTS.md §Perf, deepseek decode_32k): at decode the
+    token count is tiny (batch x 1), but the train layout still all-gathers
+    the FSDP-sharded expert weights over `data` — 1.4 GB/layer for
+    deepseek-v3.  Here the weights stay fully resident, sharded
+    [E(model), D, F(data)], and instead the few tokens are replicated:
+
+      1. all-gather x over data  (~MBs),
+      2. each model shard routes + groups copies for ITS experts (no a2a —
+         every shard sees every token),
+      3. partial-F expert MLP with the LOCAL F slice (the activation is
+         elementwise in F, so F-slices are independent until w_down),
+      4. psum over (data, model) combines F-partials and expert shards,
+      5. each data shard keeps its batch slice.
+
+    x: [T_loc, D] (sharded over data_axes).  Per-layer wire ~ T·D bytes
+    instead of E_loc·3·D·F — ~150x less for deepseek decode.
+    """
+    m = cfg.moe
+    T_loc, D = x.shape
+    E = m.n_experts
+    E_loc = E // n_model
+    k = m.top_k
+    axes_all = tuple(data_axes) + (model_axis,)
+
+    x_full = jax.lax.all_gather(x, data_axes, axis=0, tiled=True)  # [T, D]
+    T = x_full.shape[0]
+    router = params["router"]
+    logits = jnp.einsum("td,de->te", x_full.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, k)
+    w = (w / jnp.sum(w, axis=-1, keepdims=True)).astype(jnp.float32)
+
+    midx = jax.lax.axis_index(model_axis)
+    flat_ids = ids.reshape(T * k)
+    flat_w = w.reshape(T * k)
+    copy_tok = jnp.repeat(jnp.arange(T), k)
+    mine = (flat_ids // E_loc) == midx
+    local_eid = jnp.where(mine, flat_ids % E_loc, E_loc)
+    cap = int(np.ceil(T * k / E * m.capacity_factor * n_model))
+    rank = _rank_in_group(local_eid, E_loc + 1)
+    keep = mine & (rank < cap)
+    er = jnp.where(keep, rank, cap - 1)
+    ee = jnp.where(keep, local_eid, 0)
+    xe = jnp.where(keep[:, None], x_full[copy_tok], 0)
+    grouped = jnp.zeros((E_loc, cap, D), x.dtype).at[ee, er].add(xe)
+
+    # partial-F expert MLP (w_gate/w_up: [E_loc, D, F_loc]; w_down:
+    # [E_loc, F_loc, D] -> partial sums over F)
+    g = act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", grouped, params["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", grouped, params["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", g * u, params["w_down"])
+
+    y_copy = jnp.where(keep[:, None], ye[ee, er], 0)
+    out_full = jnp.zeros((T, D), jnp.float32).at[copy_tok].add(
+        y_copy.astype(jnp.float32) * flat_w[:, None])
+    out_full = jax.lax.psum(out_full, axes_all)
+
+    didx = jnp.zeros((), jnp.int32)
+    for a in data_axes:
+        didx = didx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    out = jax.lax.dynamic_slice_in_dim(out_full, didx * T_loc, T_loc, 0)
+    frac = jnp.mean(jax.nn.one_hot(ids[:, 0], E), axis=0)
+    aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return out.astype(x.dtype), aux
+
+
+def _route_sharded(params, x, cfg, axis_name):
+    """Router whose [D, E] table may arrive sharded over experts inside
+    shard_map; we all-gather it (it is tiny) to route against all experts."""
+    m = cfg.moe
+    router = params["router"]
+    if router.shape[-1] != m.n_experts:
+        router = jax.lax.all_gather(router, axis_name, axis=-1, tiled=True)
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    frac = jnp.mean(jax.nn.one_hot(ids[:, 0], m.n_experts), axis=0)
+    aux = m.n_experts * jnp.sum(frac * jnp.mean(probs, axis=0))
+    return w.astype(x.dtype), ids, aux

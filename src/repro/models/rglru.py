@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+a_t = sigmoid(Λ)^(c·r_t)  (log-space, c = 8),
+r_t, i_t = sigmoid(linear(x_t)).
+
+Train/prefill uses ``jax.lax.associative_scan`` over time; decode carries
+(h, conv_state) — O(1) in sequence length.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import causal_conv1d
+
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype):
+    D = cfg.d_model
+    W = cfg.rglru.lru_width or D
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(D)
+    sw = 1.0 / np.sqrt(W)
+    return {
+        "w_in": (jax.random.normal(ks[0], (D, W)) * s).astype(dtype),
+        "w_gate_branch": (jax.random.normal(ks[1], (D, W)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru.conv_width, W))
+                   * 0.1).astype(dtype),
+        "w_r": (jax.random.normal(ks[3], (W, W)) * sw).astype(dtype),
+        "w_i": (jax.random.normal(ks[4], (W, W)) * sw).astype(dtype),
+        # Λ init so that a ∈ (0.9, 0.999) at r = 1 (Griffin init).
+        "lam": jnp.asarray(
+            np.log(np.exp(-np.log(np.linspace(0.9, 0.999, W)) / _C) - 1.0)
+            * -1.0, jnp.float32),
+        "w_out": (jax.random.normal(ks[5], (W, D)) * sw).astype(dtype),
+    }
+
+
+def _gates(params, x):
+    """x: [..., W] (post-conv).  Returns (log_a, gated_input) in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(jnp.einsum("...w,wk->...k", xf,
+                                  params["w_r"].astype(jnp.float32)))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wk->...k", xf,
+                                  params["w_i"].astype(jnp.float32)))
+    log_a = _C * r * jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return log_a, beta * (i * xf)
+
+
+def rglru_forward(params, x, cfg, *, h0=None, conv_state=None):
+    """Full-sequence recurrent block.  x: [B,S,D] -> (y, (h, conv_state))."""
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in"])
+    u, conv_state = causal_conv1d(u, params["conv_w"], conv_state)
+    log_a, b = _gates(params, u)
+    if h0 is not None:
+        # Carry the previous state as a virtual step-0 element of the scan.
+        log_a = jnp.concatenate(
+            [jnp.zeros_like(log_a[:, :1]), log_a], axis=1)
+        b = jnp.concatenate([h0.astype(jnp.float32)[:, None], b], axis=1)
+
+    def combine(c1, c2):
+        la1, b1 = c1
+        la2, b2 = c2
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    if h0 is not None:
+        h = h[:, 1:]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"]),
+                       approximate=True)
+    y = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, params["w_out"])
+    return out, (h[:, -1], conv_state)
+
+
+def rglru_decode(params, x, cache, cfg):
+    """One-token decode.  x: [B,1,D]; cache: {"state": [B,W], "conv"}."""
+    u = jnp.einsum("bsd,dw->bsw", x, params["w_in"])
+    u, conv = causal_conv1d(u, params["conv_w"], cache["conv"])
+    log_a, b = _gates(params, u[:, 0])
+    h = jnp.exp(log_a) * cache["state"].astype(jnp.float32) + b
+    gate = jax.nn.gelu(
+        jnp.einsum("bsd,dw->bsw", x, params["w_gate_branch"])[:, 0],
+        approximate=True)
+    y = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("bw,wd->bd", y, params["w_out"])[:, None]
+    return out, {"state": h, "conv": conv}

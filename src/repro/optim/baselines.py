@@ -1,0 +1,131 @@
+"""Federated first/second-order baselines the paper(s) compare against.
+
+* DIANA [24]  — first-order compressed gradient differences (exactly the
+  "CGD" part of FLECS-CGD with no second-order preconditioning).
+* FedNL [34]  — per-worker d×d Hessian LEARNING with compressed Hessian
+  differences (small-d only; the memory bottleneck FLECS removes).
+* DistributedGD — uncompressed synchronous gradient descent.
+
+All share the (local_grad, local_hvp) oracle interface of
+``repro.core.flecs`` and report per-node communicated bits, so the
+benchmark plots share an x-axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import get_compressor
+
+
+class DianaState(NamedTuple):
+    w: jnp.ndarray
+    h: jnp.ndarray          # [n, d]
+    k: jnp.ndarray
+    bits_per_node: jnp.ndarray
+
+
+def make_diana_step(alpha: float, gamma: float, compressor: str,
+                    local_grad: Callable):
+    Q = get_compressor(compressor)
+
+    def step(state: DianaState, key):
+        n, d = state.h.shape
+
+        def worker(i, hk, kq):
+            g = local_grad(state.w, i, jax.random.fold_in(key, i))
+            return Q.compress(kq, g - hk)
+
+        ks = jax.random.split(jax.random.fold_in(key, 1), n)
+        c = jax.vmap(worker)(jnp.arange(n), state.h, ks)
+        g_tilde = jnp.mean(c + state.h, axis=0)
+        w = state.w - alpha * g_tilde
+        h = state.h + gamma * c
+        bits = d * Q.bits_per_value
+        new = DianaState(w, h, state.k + 1, state.bits_per_node + bits)
+        return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
+                     "bits_per_node": new.bits_per_node}
+
+    return step
+
+
+def init_diana(w0, n_workers):
+    return DianaState(w0.astype(jnp.float32),
+                      jnp.zeros((n_workers, w0.shape[0]), jnp.float32),
+                      jnp.zeros((), jnp.int32), jnp.zeros(()))
+
+
+class FedNLState(NamedTuple):
+    w: jnp.ndarray
+    H: jnp.ndarray          # [n, d, d] per-worker Hessian estimates
+    k: jnp.ndarray
+    bits_per_node: jnp.ndarray
+
+
+def make_fednl_step(alpha: float, compressor: str, local_grad: Callable,
+                    local_hessian: Callable, mu: float):
+    """FedNL (option with projection/regularized direction):
+    H^i_{k+1} = H^i_k + C(∇²f_i(w_k) - H^i_k);  w⁺ = w - α [H̄]_μ^{-1} ḡ."""
+    C = get_compressor(compressor)
+
+    def step(state: FedNLState, key):
+        n, d = state.H.shape[:2]
+
+        def worker(i, Hk, kc):
+            g = local_grad(state.w, i, jax.random.fold_in(key, i))
+            Hi = local_hessian(state.w, i)
+            D = C.compress(kc, Hi - Hk)
+            return g, D
+
+        ks = jax.random.split(jax.random.fold_in(key, 1), n)
+        g_all, D_all = jax.vmap(worker)(jnp.arange(n), state.H, ks)
+        H_new = state.H + D_all
+        g_bar = jnp.mean(g_all, axis=0)
+        H_bar = jnp.mean(H_new, axis=0)
+        # positive-definite safeguard: H̄ + μI on the symmetric part
+        Hs = 0.5 * (H_bar + H_bar.T) + mu * jnp.eye(d)
+        lam, V = jnp.linalg.eigh(Hs)
+        lam = jnp.maximum(jnp.abs(lam), mu)
+        p = -(V @ ((V.T @ g_bar) / lam))
+        w = state.w + alpha * p
+        bits = d * 32.0 + d * d * C.bits_per_value
+        new = FedNLState(w, H_new, state.k + 1, state.bits_per_node + bits)
+        return new, {"g_tilde_norm": jnp.linalg.norm(g_bar),
+                     "bits_per_node": new.bits_per_node}
+
+    return step
+
+
+def init_fednl(w0, n_workers):
+    d = w0.shape[0]
+    return FedNLState(w0.astype(jnp.float32),
+                      jnp.zeros((n_workers, d, d), jnp.float32),
+                      jnp.zeros((), jnp.int32), jnp.zeros(()))
+
+
+class GDState(NamedTuple):
+    w: jnp.ndarray
+    k: jnp.ndarray
+    bits_per_node: jnp.ndarray
+
+
+def make_gd_step(alpha: float, local_grad: Callable, n_workers: int):
+    def step(state: GDState, key):
+        d = state.w.shape[0]
+        g = jnp.mean(jax.vmap(
+            lambda i: local_grad(state.w, i, jax.random.fold_in(key, i)))(
+                jnp.arange(n_workers)), axis=0)
+        new = GDState(state.w - alpha * g, state.k + 1,
+                      state.bits_per_node + d * 32.0)
+        return new, {"g_tilde_norm": jnp.linalg.norm(g),
+                     "bits_per_node": new.bits_per_node}
+
+    return step
+
+
+def init_gd(w0):
+    return GDState(w0.astype(jnp.float32), jnp.zeros((), jnp.int32),
+                   jnp.zeros(()))

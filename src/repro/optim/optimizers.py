@@ -1,0 +1,134 @@
+"""First-order optimizers (no external deps — optax is not assumed).
+
+Each optimizer is a pair of pure functions bundled in an ``Optimizer``
+namedtuple: ``init(params) -> state`` and
+``update(grads, state, params) -> (updates, new_state)`` where ``updates``
+are to be ADDED to params (sign included).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd(lr: float):
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        return jax.tree.map(lambda g, p: _cast_like(-lr * g, p), grads, params), ()
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9):
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(m.dtype),
+                             state, grads)
+        upd = jax.tree.map(lambda m, p: _cast_like(-lr * m, p), new_m, params)
+        return upd, new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0):
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(m, v, p):
+            step = m / bc1 / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return _cast_like(-lr * step, p)
+
+        return (jax.tree.map(upd, m, v, params),
+                {"m": m, "v": v, "t": t})
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float, eps: float = 1e-30, clip: float = 1.0,
+              decay: float = 0.8):
+    """Memory-factored RMS optimizer (Shazeer & Stern).  Second moment is
+    factored over the last two dims for ndim>=2 tensors — the default for
+    the 100B+ dry-run configs where full Adam state cannot fit."""
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"s": jax.tree.map(leaf, params), "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        beta = 1.0 - (t.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def leaf(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                r = beta * s["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * s["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r[..., None] / jnp.maximum(rc[..., None], eps)) * c[..., None, :]
+                u = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip)
+            return _cast_like(-lr * u, p), new_s
+
+        flat = jax.tree.map(leaf, grads, state["s"], params,
+                            is_leaf=lambda x: isinstance(x, jnp.ndarray))
+        upd = jax.tree.map(lambda pair: pair[0], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+        new_s = jax.tree.map(lambda pair: pair[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return upd, {"s": new_s, "t": t}
+
+    return Optimizer(init, update)
+
+
+OPTIMIZERS = {"sgd": sgd, "momentum": momentum, "adam": adam,
+              "adafactor": adafactor}
+
+
+def get_optimizer(name: str, lr: float, **kw) -> Optimizer:
+    return OPTIMIZERS[name](lr, **kw)

@@ -1,0 +1,93 @@
+"""Train / serve step factories (the jit roots for runs and dry-runs)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.context import ModelContext
+from repro.models.loss import lm_loss
+from repro.models.model import decode_step, forward, prefill
+from repro.optim.optimizers import Optimizer
+
+
+def _loss_fn(params, batch, cfg: ModelConfig, ctx: ModelContext):
+    hidden, aux = forward(params, batch, cfg, ctx)
+    mask = None
+    if cfg.family == "vlm":                      # loss on text positions only
+        S = hidden.shape[1]
+        mask = jnp.broadcast_to(
+            (jnp.arange(S) >= cfg.n_img_tokens)[None, :].astype(jnp.float32),
+            hidden.shape[:2])
+    loss = lm_loss(params, hidden, batch["labels"], cfg, mask=mask)
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, ctx: ModelContext,
+                    optimizer: Optimizer, *, microbatches: int = 1):
+    """Standard data-parallel training step (baseline; FLECS-CGD variant in
+    ``repro.core.dl_flecs``).  Gradient accumulation over microbatches via
+    lax.scan keeps per-step activation memory at 1/microbatches."""
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(_loss_fn)(params, batch, cfg, ctx)
+        else:
+            def split(x):
+                y = x.reshape(microbatches, x.shape[0] // microbatches,
+                              *x.shape[1:])
+                if ctx.mesh is not None:
+                    # Keep rows (not the microbatch dim) sharded over data —
+                    # GSPMD otherwise loses the batch sharding at the reshape.
+                    spec = jax.sharding.PartitionSpec(
+                        None, ctx.data_axes, *([None] * (y.ndim - 2)))
+                    y = jax.lax.with_sharding_constraint(
+                        y, jax.sharding.NamedSharding(ctx.mesh, spec))
+                return y
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(_loss_fn)(params, mb, cfg, ctx)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc_body, (jnp.zeros((), jnp.float32), g0), mbs)
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        updates, new_opt = optimizer.update(grads, opt_state, params)
+        new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        return new_params, new_opt, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, ctx: ModelContext, max_len: int = 0):
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg, ctx, max_len=max_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, ctx: ModelContext):
+    """One decode step: (params, cache, batch, pos) -> (logits, new_cache)."""
+
+    def serve_step(params, cache, batch, pos):
+        return decode_step(params, cache, batch, pos, cfg, ctx)
+
+    return serve_step

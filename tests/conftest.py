@@ -1,0 +1,10 @@
+# NOTE: no xla_force_host_platform_device_count here — smoke tests and
+# benches must see the single real device.  Tests that need a multi-device
+# mesh run themselves in a subprocess (tests/subproc/).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,157 @@
+"""Numerical tests for the attention/chunking paths and recurrent mixers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import attend_cache, chunked_attention
+from repro.models.layers import causal_conv1d
+from repro.models.rglru import init_rglru, rglru_decode, rglru_forward
+from repro.models.ssm import ssd_scan
+
+
+def _dense_ref(q, k, v, window=0, cap=0.0, q_offset=0):
+    B, Sq, H, Dk = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, Dk).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32))
+    s = s / np.sqrt(Dk)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = qpos >= kpos
+    if window:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, -1)
+
+
+@pytest.mark.parametrize("window,cq,ck", [(0, 64, 64), (0, 32, 128),
+                                          (96, 64, 64), (48, 32, 32)])
+def test_chunked_attention_matches_dense(rng, window, cq, ck):
+    B, S, H, KV, D = 2, 256, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    out = chunked_attention(q, k, v, window=window, chunk_q=cq, chunk_k=ck)
+    ref = _dense_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attend_cache_matches_full(rng):
+    """Decode against a cache == last row of full attention."""
+    B, S, H, KV, D = 2, 33, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    full = _dense_ref(q, k, v)
+    out = attend_cache(q[:, -1], k, v, n_valid=S)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, -1]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_attend_cache_masks_invalid_slots(rng):
+    B, S, H, KV, D = 1, 16, 2, 2, 8
+    q = jnp.asarray(rng.normal(size=(B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    out_a = attend_cache(q, k, v, n_valid=7)
+    k2 = k.at[:, 7:].set(999.0)   # garbage beyond n_valid must not matter
+    v2 = v.at[:, 7:].set(-999.0)
+    out_b = attend_cache(q, k2, v2, n_valid=7)
+    np.testing.assert_allclose(np.asarray(out_a), np.asarray(out_b),
+                               rtol=1e-5)
+
+
+# --- SSD -------------------------------------------------------------------
+
+def _ssd_sequential(xh, dt, A_log, B_mat, C_mat):
+    Bb, S, H, P = xh.shape
+    N = B_mat.shape[-1]
+    A = -np.exp(np.asarray(A_log, np.float64))
+    h = np.zeros((Bb, H, P, N))
+    ys = []
+    for t in range(S):
+        a = np.exp(np.asarray(dt[:, t], np.float64) * A)      # [B,H]
+        upd = np.einsum("bh,bn,bhp->bhpn", np.asarray(dt[:, t], np.float64),
+                        np.asarray(B_mat[:, t], np.float64),
+                        np.asarray(xh[:, t], np.float64))
+        h = h * a[..., None, None] + upd
+        ys.append(np.einsum("bn,bhpn->bhp", np.asarray(C_mat[:, t],
+                                                       np.float64), h))
+    return np.stack(ys, axis=1), h
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 24])
+def test_ssd_scan_matches_sequential(rng, chunk):
+    B, S, H, P, N = 2, 24, 3, 4, 5
+    xh = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(B, S, H)), jnp.float32)
+    A_log = jnp.asarray(rng.uniform(-1, 1, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    y, state = ssd_scan(xh, dt, A_log, Bm, Cm, chunk)
+    y_ref, state_ref = _ssd_sequential(xh, dt, A_log, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(state), state_ref, rtol=2e-3,
+                               atol=2e-3)
+
+
+def test_ssd_scan_carried_state(rng):
+    """Splitting a sequence across two calls == one call (serving resume)."""
+    B, S, H, P, N = 1, 16, 2, 4, 3
+    xh = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, size=(B, S, H)), jnp.float32)
+    A_log = jnp.zeros((H,))
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)), jnp.float32)
+    y_full, s_full = ssd_scan(xh, dt, A_log, Bm, Cm, 4)
+    y1, s1 = ssd_scan(xh[:, :8], dt[:, :8], A_log, Bm[:, :8], Cm[:, :8], 4)
+    y2, s2 = ssd_scan(xh[:, 8:], dt[:, 8:], A_log, Bm[:, 8:], Cm[:, 8:], 4,
+                      init_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), rtol=2e-3,
+                               atol=2e-3)
+
+
+# --- RG-LRU ----------------------------------------------------------------
+
+def test_rglru_scan_matches_stepwise(rng):
+    from repro.configs import get_config
+    cfg = get_config("recurrentgemma-9b", smoke=True)
+    params = init_rglru(jax.random.key(0), cfg, jnp.float32)
+    B, S = 2, 10
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32) * 0.1
+    y_full, (h_full, _) = rglru_forward(params, x, cfg)
+    W = cfg.rglru.lru_width or cfg.d_model
+    cache = {"state": jnp.zeros((B, W), jnp.float32),
+             "conv": jnp.zeros((B, cfg.rglru.conv_width - 1, W), jnp.float32)}
+    outs = []
+    for t in range(S):
+        y, cache = rglru_decode(params, x[:, t:t + 1], cache, cfg)
+        outs.append(y)
+    y_steps = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_steps), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cache["state"]), np.asarray(h_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_causal_conv_stream_equivalence(rng):
+    B, S, C, K = 2, 12, 5, 4
+    x = jnp.asarray(rng.normal(size=(B, S, C)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(K, C)), jnp.float32)
+    y_full, _ = causal_conv1d(x, w)
+    state = jnp.zeros((B, K - 1, C))
+    ys = []
+    for t in range(S):
+        y, state = causal_conv1d(x[:, t:t + 1], w, state)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,95 @@
+"""Checkpoint round-trips + config-system invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import restore, save
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, list_archs
+from repro.configs.base import FFN_NONE, reduce_for_smoke
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    tree = {"a": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32),
+            "b": [jnp.arange(5), {"c": jnp.ones((2, 2), jnp.bfloat16)}]}
+    save(tmp_path / "ck", tree, step=7)
+    like = jax.eval_shape(lambda: tree)
+    out, step = restore(tmp_path / "ck", like)
+    assert step == 7
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32))
+
+
+def test_checkpoint_structure_mismatch(tmp_path, rng):
+    tree = {"a": jnp.ones(3)}
+    save(tmp_path / "ck", tree)
+    with pytest.raises(AssertionError):
+        restore(tmp_path / "ck", {"zzz": jnp.ones(3)})
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+    families = {c.family for c in ARCHS.values()}
+    assert families == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_layer_groups_cover_plan(arch):
+    cfg = get_config(arch)
+    groups = cfg.layer_groups()
+    rebuilt = []
+    for block, reps in groups:
+        rebuilt.extend(list(block) * reps)
+    assert tuple(rebuilt) == cfg.layer_plan
+    assert sum(len(b) * r for b, r in groups) == cfg.n_layers
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_reduction_bounds(arch):
+    cfg = reduce_for_smoke(get_config(arch))
+    assert cfg.d_model <= 512
+    assert len(cfg.layer_plan) <= 4
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    # reduced plan covers every distinct (mixer, ffn) kind of the original
+    full_kinds = set(get_config(arch).layer_plan)
+    assert full_kinds <= set(cfg.layer_plan) | full_kinds  # sanity
+    assert set(cfg.layer_plan) <= full_kinds
+
+
+def test_input_shapes_assignment():
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["decode_32k"].kind == "decode"
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+    assert INPUT_SHAPES["long_500k"].global_batch == 1
+
+
+def test_long_context_policy():
+    runnable = {a for a in list_archs()
+                if get_config(a).supports_long_context}
+    assert runnable == {"mamba2-1.3b", "recurrentgemma-9b", "gemma2-9b",
+                        "gemma3-27b"}
+
+
+def test_ssm_has_no_ffn():
+    cfg = get_config("mamba2-1.3b")
+    assert all(f == FFN_NONE for _, f in cfg.layer_plan)
+
+
+def test_param_budget_matches_names():
+    """The config system reproduces the advertised parameter counts."""
+    import numpy as np
+    from repro.models.model import abstract_params
+    expect = {"deepseek-v3-671b": 671e9, "qwen3-moe-235b-a22b": 235e9,
+              "yi-34b": 34e9, "gemma3-27b": 27e9, "gemma2-9b": 9.2e9,
+              "recurrentgemma-9b": 9.4e9, "llava-next-mistral-7b": 7.2e9,
+              "musicgen-large": 3.3e9, "tinyllama-1.1b": 1.1e9,
+              "mamba2-1.3b": 1.4e9}
+    for arch, n_exp in expect.items():
+        pa = abstract_params(get_config(arch))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(pa))
+        assert abs(n - n_exp) / n_exp < 0.06, (arch, n, n_exp)

@@ -1,0 +1,109 @@
+"""Property tests for the compression operators (Definition 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compressors import (decode_int8, encode_int8, get_compressor,
+                                    identity, natural, random_dithering,
+                                    top_k)
+
+vec = st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+               min_size=2, max_size=64).map(
+                   lambda xs: np.asarray(xs, np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(vec, st.sampled_from([4, 16, 64, 128]))
+def test_dithering_unbiased(x, s):
+    """E[Q(x)] = x — empirical mean over many independent draws."""
+    Q = random_dithering(s)
+    if np.allclose(x, 0):
+        return
+    keys = jax.random.split(jax.random.key(0), 512)
+    qs = jax.vmap(lambda k: Q.compress(k, jnp.asarray(x)))(keys)
+    mean = np.asarray(jnp.mean(qs, axis=0))
+    norm = np.max(np.abs(x))
+    # std error of the mean per coord <= norm/(2 s sqrt(n))
+    tol = 6.0 * norm / (2 * s * np.sqrt(512)) + 1e-6
+    np.testing.assert_allclose(mean, x, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(vec, st.sampled_from([16, 64]))
+def test_dithering_second_moment_bound(x, s):
+    """E||Q(x)||² ≤ (1 + ω(d))||x||² with ω = d/(4s²)."""
+    Q = random_dithering(s)
+    nrm2 = float(np.sum(x * x))
+    if nrm2 == 0:
+        return
+    keys = jax.random.split(jax.random.key(1), 256)
+    qs = jax.vmap(lambda k: Q.compress(k, jnp.asarray(x)))(keys)
+    second = float(jnp.mean(jnp.sum(qs * qs, axis=-1)))
+    omega = Q.omega(x.size)
+    assert second <= (1 + omega) * nrm2 * 1.05 + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(vec)
+def test_natural_unbiased(x):
+    Q = natural()
+    keys = jax.random.split(jax.random.key(2), 1024)
+    qs = jax.vmap(lambda k: Q.compress(k, jnp.asarray(x)))(keys)
+    mean = np.asarray(jnp.mean(qs, axis=0))
+    tol = 6.0 * np.maximum(np.abs(x), 1e-3) / np.sqrt(1024) + 1e-5
+    assert np.all(np.abs(mean - x) <= tol)
+
+
+def test_identity_exact(rng):
+    Q = identity()
+    x = jnp.asarray(rng.normal(size=37), jnp.float32)
+    np.testing.assert_array_equal(Q.compress(jax.random.key(0), x), x)
+
+
+def test_topk_keeps_largest(rng):
+    Q = top_k(0.25)
+    x = jnp.asarray(rng.normal(size=100), jnp.float32)
+    y = np.asarray(Q.compress(jax.random.key(0), x))
+    nz = np.nonzero(y)[0]
+    assert len(nz) == 25
+    thresh = np.sort(np.abs(np.asarray(x)))[-25]
+    assert np.all(np.abs(np.asarray(x)[nz]) >= thresh - 1e-6)
+    np.testing.assert_allclose(y[nz], np.asarray(x)[nz])
+
+
+def test_int8_roundtrip_error_bounded(rng):
+    x = jnp.asarray(rng.normal(size=(64, 33)), jnp.float32)
+    levels, scale = encode_int8(jax.random.key(3), x, s=127)
+    assert levels.dtype == jnp.int8
+    err = np.max(np.abs(np.asarray(decode_int8(levels, scale) - x)))
+    assert err <= float(scale) + 1e-7
+
+
+def test_int8_sum_compatible(rng):
+    """decode(Σ levels)·scale == Σ decode(levels) — the property the
+    compressed all-reduce relies on."""
+    xs = [jnp.asarray(rng.normal(size=50), jnp.float32) for _ in range(4)]
+    # shared scale
+    s = 63
+    norm = max(float(jnp.max(jnp.abs(x))) for x in xs)
+    lvls = []
+    for i, x in enumerate(xs):
+        y = x / norm * s
+        lo = jnp.floor(y)
+        u = jax.random.uniform(jax.random.key(i), x.shape)
+        lvls.append((lo + (u < (y - lo))).astype(jnp.int8))
+    summed = sum(l.astype(jnp.int32) for l in lvls)
+    lhs = np.asarray(summed, np.float32) * norm / s
+    rhs = sum(np.asarray(l, np.float32) * norm / s for l in lvls)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-6)
+
+
+def test_registry():
+    assert get_compressor("dither64").name == "dither64"
+    assert get_compressor("identity").bits_per_value == 32.0
+    assert get_compressor("dither128").bits_per_value == np.ceil(
+        np.log2(257))
+    with pytest.raises(ValueError):
+        get_compressor("nope")

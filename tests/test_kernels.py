@@ -1,0 +1,85 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps vs the
+pure-jnp oracles in each kernel's ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dither.dither import dither_decode, dither_encode
+from repro.kernels.dither.ops import dequantize, quantize
+from repro.kernels.dither.ref import dither_decode_ref, dither_encode_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@pytest.mark.parametrize("R,C,br,s", [(16, 128, 8, 127), (32, 256, 8, 63),
+                                      (8, 512, 4, 15), (64, 128, 16, 127)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_dither_encode_matches_ref(rng, R, C, br, s, dtype):
+    x = jnp.asarray(rng.normal(size=(R, C)) * 10, dtype)
+    u = jax.random.uniform(jax.random.key(0), (R, C), jnp.float32)
+    lv_k, sc_k = dither_encode(x, u, s=s, block_rows=br, interpret=True)
+    lv_r, sc_r = dither_encode_ref(x, u, s, br)
+    np.testing.assert_array_equal(np.asarray(lv_k), np.asarray(lv_r))
+    np.testing.assert_allclose(np.asarray(sc_k), np.asarray(sc_r), rtol=1e-6)
+    out_k = dither_decode(lv_k, sc_k, block_rows=br, interpret=True)
+    out_r = dither_decode_ref(lv_r, sc_r, br)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(1000,), (33, 77), (4, 5, 6), (128, 512)])
+def test_dither_roundtrip_any_shape(rng, shape):
+    x = jnp.asarray(rng.normal(size=shape), jnp.float32)
+    lv, sc, meta = quantize(jax.random.key(1), x, s=63, interpret=True)
+    xr = dequantize(lv, sc, meta, interpret=True)
+    assert xr.shape == x.shape
+    assert float(jnp.max(jnp.abs(xr - x))) <= float(jnp.max(sc)) + 1e-6
+
+
+def test_dither_unbiased_through_kernel(rng):
+    x = jnp.asarray(rng.normal(size=(8, 128)), jnp.float32)
+    keys = jax.random.split(jax.random.key(2), 256)
+
+    def enc(k):
+        u = jax.random.uniform(k, x.shape)
+        lv, sc = dither_encode(x, u, s=31, block_rows=8, interpret=True)
+        return dither_decode(lv, sc, block_rows=8, interpret=True)
+
+    mean = jnp.mean(jax.vmap(enc)(keys), axis=0)
+    step = float(jnp.max(jnp.abs(x)) / 31)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(x),
+                               atol=6 * step / 2 / np.sqrt(256) + 1e-5)
+
+
+@pytest.mark.parametrize("B,H,KV,S,D,window,cap", [
+    (1, 4, 2, 256, 64, 0, 0.0),
+    (2, 4, 4, 128, 32, 0, 50.0),
+    (1, 8, 2, 512, 64, 128, 0.0),
+    (2, 2, 1, 256, 128, 64, 30.0),
+    (1, 2, 2, 384, 64, 0, 0.0),      # non-pow2 block count
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(rng, B, H, KV, S, D, window, cap, dtype):
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, D)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, D)), dtype)
+    o_k = flash_attention(q, k, v, window=window, cap=cap,
+                          block_q=128, block_k=128, interpret=True)
+    o_r = attention_ref(q, k, v, window=window, cap=cap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_size_invariance(rng):
+    B, H, KV, S, D = 1, 2, 2, 256, 32
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, S, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, S, D)), jnp.float32)
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+            for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-5, atol=2e-5)

@@ -1,0 +1,187 @@
+"""Sharding-rule unit tests + chunked loss + optimizer correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.hlo_static import analyze
+from repro.launch.sharding import _RULES, param_specs, spec_for
+from repro.models import CPU_CTX, forward, head_logits, init_params
+from repro.models.loss import _ce, lm_loss
+from repro.optim.optimizers import get_optimizer
+
+P = jax.sharding.PartitionSpec
+
+
+class FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+def test_spec_divisibility_fallback():
+    # kv-heads 8 on a 16-way model axis -> replicated, D still data-sharded
+    spec = spec_for((2048, 8, 64), _RULES["wk"], FakeMesh())
+    assert spec == P("data", None, None)
+    # divisible heads get the model axis
+    spec = spec_for((2048, 32, 64), _RULES["wq"], FakeMesh())
+    assert spec == P("data", "model", None)
+    # vocab 50280 %% 16 != 0 -> embed vocab dim falls back to replication
+    spec = spec_for((50280, 2048), _RULES["embed"], FakeMesh())
+    assert spec == P(None, "data")
+
+
+def test_param_specs_cover_all_leaves():
+    for arch in ("deepseek-v3-671b", "mamba2-1.3b", "recurrentgemma-9b"):
+        cfg = get_config(arch)
+        from repro.models.model import abstract_params
+        pa = abstract_params(cfg)
+        specs = param_specs(pa, FakeMesh())
+        leaves = jax.tree.leaves(specs,
+                                 is_leaf=lambda s: isinstance(s, P))
+        assert len(leaves) == len(jax.tree.leaves(pa))
+        # every big tensor gets at least one sharded dim
+        for (path, leaf), spec in zip(
+                jax.tree_util.tree_flatten_with_path(pa)[0], leaves):
+            if np.prod(leaf.shape) > 4_000_000:
+                assert any(s is not None for s in spec), (path, leaf.shape)
+
+
+def test_chunked_loss_matches_direct(rng):
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = init_params(cfg, jax.random.key(0), jnp.float32)
+    B, S = 2, 16
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    labels = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    h, _ = forward(params, batch, cfg, CPU_CTX)
+    logits = head_logits(params, h, cfg)
+    direct = float(jnp.mean(_ce(logits, labels)))
+    for chunk in (4, 8, 32, 1024):
+        chunked = float(lm_loss(params, h, labels, cfg, chunk=chunk))
+        assert abs(chunked - direct) < 1e-4
+
+
+def test_loss_mask(rng):
+    cfg = get_config("tinyllama-1.1b", smoke=True)
+    params = init_params(cfg, jax.random.key(0), jnp.float32)
+    B, S = 2, 8
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)),
+                                   jnp.int32)}
+    labels = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    h, _ = forward(params, batch, cfg, CPU_CTX)
+    mask = jnp.zeros((B, S)).at[:, S // 2:].set(1.0)
+    masked = float(lm_loss(params, h, labels, cfg, mask=mask))
+    logits = head_logits(params, h, cfg)
+    ref = float(jnp.sum(_ce(logits, labels) * mask) / jnp.sum(mask))
+    assert abs(masked - ref) < 1e-4
+
+
+# --- optimizers -------------------------------------------------------------
+
+def test_adam_converges_quadratic():
+    opt = get_optimizer("adam", 0.1)
+    w = {"a": jnp.ones(4) * 5.0}
+    s = opt.init(w)
+    for _ in range(300):
+        g = jax.tree.map(lambda x: 2 * x, w)
+        upd, s = opt.update(g, s, w)
+        w = jax.tree.map(lambda a, b: a + b, w, upd)
+    assert float(jnp.max(jnp.abs(w["a"]))) < 1e-2
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adafactor"])
+def test_optimizers_descend(name):
+    opt = get_optimizer(name, 0.05)
+    w = {"a": jnp.ones((4, 3)) * 3.0, "b": jnp.ones(5)}
+    s = opt.init(w)
+    def loss(w):
+        return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(w))
+    l0 = float(loss(w))
+    for _ in range(50):
+        g = jax.grad(loss)(w)
+        upd, s = opt.update(g, s, w)
+        w = jax.tree.map(lambda a, b: a + b, w, upd)
+    assert float(loss(w)) < 0.5 * l0
+
+
+# --- HLO static analyzer ----------------------------------------------------
+
+def test_hlo_analyzer_counts_loops():
+    """while body costs multiply by known_trip_count."""
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %a = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%a, %a), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %d)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8] parameter(0)
+  %i0 = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%i0, %x)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+    res = analyze(hlo)
+    # one 8x8x8 dot = 2*8*8*8 = 1024 flops, x10 trips
+    assert res["flops_per_chip"] == pytest.approx(10240.0)
+
+
+def test_hlo_analyzer_collectives_classified():
+    hlo = """
+HloModule test
+
+ENTRY %main (x: f32[128]) -> f32[128] {
+  %x = f32[128] parameter(0)
+  %ar = f32[128] all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%add
+  ROOT %cp = f32[128] all-reduce(%ar), replica_groups={{0,16,32,48}}, to_apply=%add
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+    res = analyze(hlo)
+    assert res["wire_all-reduce"] == pytest.approx(2 * 2 * 512.0)
+    # stride 1 < 16 => (sub-)model axis; stride 16 => data/pod axis
+    assert res["wire_model_axis"] == pytest.approx(2 * 512.0)
+    assert res["wire_data_axis"] == pytest.approx(2 * 512.0)
+
+
+def test_hlo_analyzer_tuple_collectives_and_iota_groups():
+    """XLA's combiner emits tuple-result all-reduces; iota replica groups
+    with a transpose are data-axis (stride = model size)."""
+    hlo = """
+HloModule test
+
+ENTRY %main (x: f32[64], y: f32[64]) -> f32[64] {
+  %x = f32[64] parameter(0)
+  %y = f32[64] parameter(1)
+  %ar = (f32[64], f32[64]) all-reduce(%x, %y), replica_groups=[16,16]<=[16,16]T(1,0), to_apply=%add
+  ROOT %g = f32[64] get-tuple-element(%ar), index=0
+}
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+    res = analyze(hlo)
+    assert res["wire_all-reduce"] == pytest.approx(2 * 2 * 256.0)  # tuple!
+    assert res["wire_data_axis"] == pytest.approx(2 * 2 * 256.0)
+    assert res["wire_model_axis"] == 0.0
