@@ -16,9 +16,7 @@ from repro.data.logreg import make_problem
 
 
 def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else None
-    out = fn(*args)
-    jax.block_until_ready(out)
+    jax.block_until_ready(fn(*args))    # one warm-up call (compile + run)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

@@ -7,6 +7,13 @@ Figure 3    — iterate updates: truncated inverse (Alg 4) vs FedSONIA (Alg 5).
 Claim §3    — communication complexity table:
               O(cmd + 32d + 32m²) vs O(cmd + cd + 32m²), measured.
 Comparison  — vs DIANA / FedNL / GD baselines (as the FLECS paper does).
+Beyond-paper — dithering-level ablation, a *vmapped* step-size x level grid
+              (one compiled program for the whole grid), and a partial-
+              participation ablation (FedNL/FedLab-style client sampling).
+
+Every trajectory is ONE lax.scan program via ``repro.core.driver`` —
+per-iteration metrics are recorded inside the scan, not by re-entering the
+host between rounds.
 
 Emits CSV rows ``name,us_per_call,derived`` plus human-readable tables;
 raw trajectories land in benchmarks/out/*.json for plotting.
@@ -21,7 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
+from repro.core.driver import run_experiment, run_sweep
+from repro.core.flecs import (FlecsConfig, bits_per_round, hparam_grid,
+                              init_state, make_flecs_step,
+                              make_flecs_sweep_step)
 from repro.data.logreg import make_problem
 from repro.optim.baselines import (init_diana, init_fednl, init_gd,
                                    make_diana_step, make_fednl_step,
@@ -31,18 +41,18 @@ OUT = Path(__file__).resolve().parent / "out"
 
 
 def _trajectory(step, state, prob, iters, seed=0, every=5):
-    key = jax.random.key(seed)
-    rows = []
+    """One scan program; thin the in-scan trace to every`every`-th row."""
     t0 = time.perf_counter()
-    for k in range(iters):
-        key, sk = jax.random.split(key)
-        state, aux = step(state, sk)
-        if k % every == 0 or k == iters - 1:
-            F = float(prob.global_loss(state.w))
-            g2 = float(jnp.sum(jnp.square(prob.global_grad(state.w))))
-            rows.append({"iter": k, "F": F, "grad_sq": g2,
-                         "bits_per_node": float(state.bits_per_node)})
+    state, tr = run_experiment(step, state, jax.random.key(seed), iters,
+                               record=lambda st: prob.metrics(st.w))
+    jax.block_until_ready(state)
     dt = (time.perf_counter() - t0) / iters * 1e6
+    F = np.asarray(tr["F"])
+    g2 = np.asarray(tr["grad_sq"])
+    bits = np.asarray(tr["bits_per_node"]).max(axis=1)
+    rows = [{"iter": k, "F": float(F[k]), "grad_sq": float(g2[k]),
+             "bits_per_node": float(bits[k])}
+            for k in range(iters) if k % every == 0 or k == iters - 1]
     return rows, dt
 
 
@@ -55,7 +65,7 @@ def fig1_flecs_vs_cgd(prob, iters=300):
         for name, gc in (("FLECS", "identity"), ("FLECS-CGD", "dither64")):
             cfg = FlecsConfig(m=m, alpha=1.0, beta=1.0, gamma=1.0,
                               grad_compressor=gc, hess_compressor="dither64")
-            step = jax.jit(make_flecs_step(cfg, lg, lh))
+            step = make_flecs_step(cfg, lg, lh)
             st = init_state(jnp.zeros(prob.d), prob.n_workers)
             rows, dt = _trajectory(step, st, prob, iters)
             results[f"{name}-m{m}"] = rows
@@ -78,7 +88,7 @@ def fig3_iterate_updates(prob, iters=300):
     ):
         cfg = FlecsConfig(m=4, grad_compressor="dither64",
                           hess_compressor="dither64", **kw)
-        step = jax.jit(make_flecs_step(cfg, lg, lh))
+        step = make_flecs_step(cfg, lg, lh)
         st = init_state(jnp.zeros(prob.d), prob.n_workers)
         rows, dt = _trajectory(step, st, prob, iters)
         results[name] = rows
@@ -96,14 +106,15 @@ def comm_table(prob):
                                  ("FLECS-CGD", "dither64", 8)):
             cfg = FlecsConfig(m=m, grad_compressor=gc,
                               hess_compressor="dither64")
-            step = jax.jit(make_flecs_step(cfg, lg, lh))
+            step = make_flecs_step(cfg, lg, lh)
             st = init_state(jnp.zeros(prob.d), prob.n_workers)
-            st, _ = step(st, jax.random.key(0))
-            measured = float(st.bits_per_node)
+            st, _ = run_experiment(step, st, jax.random.key(0), 1)
+            measured = float(st.bits_per_node[0])
             formula = 8 * m * d + c_bits * d + 32 * m * m
             rows.append({"method": name, "m": m, "measured_bits": measured,
                          "formula_bits": formula,
-                         "match": abs(measured - formula) < 1e-3})
+                         "match": abs(measured - formula) < 1e-3
+                         and formula == bits_per_round(cfg, d)})
     return rows
 
 
@@ -112,12 +123,12 @@ def baselines_comparison(prob, iters=200):
     out = {}
     cfg = FlecsConfig(m=2, grad_compressor="dither64",
                       hess_compressor="dither64")
-    step = jax.jit(make_flecs_step(cfg, lg, lh))
+    step = make_flecs_step(cfg, lg, lh)
     rows, dt = _trajectory(step, init_state(jnp.zeros(prob.d),
                                             prob.n_workers), prob, iters)
     out["FLECS-CGD"] = (rows, dt)
 
-    step = jax.jit(make_diana_step(1.0, 0.5, "dither64", lg))
+    step = make_diana_step(1.0, 0.5, "dither64", lg)
     rows, dt = _trajectory(step, init_diana(jnp.zeros(prob.d),
                                             prob.n_workers), prob, iters)
     out["DIANA"] = (rows, dt)
@@ -125,15 +136,15 @@ def baselines_comparison(prob, iters=200):
     def local_hessian(w, i):
         return jax.hessian(lambda ww: prob.local_loss(ww, i))(w)
 
-    step = jax.jit(make_fednl_step(1.0, "topk0.25", lg, local_hessian,
-                                   prob.mu))
+    step = make_fednl_step(1.0, "topk0.25", lg, local_hessian, prob.mu)
     rows, dt = _trajectory(step, init_fednl(jnp.zeros(prob.d),
                                             prob.n_workers), prob,
                            min(iters, 80))
     out["FedNL"] = (rows, dt)
 
-    step = jax.jit(make_gd_step(2.0, lg, prob.n_workers))
-    rows, dt = _trajectory(step, init_gd(jnp.zeros(prob.d)), prob, iters)
+    step = make_gd_step(2.0, lg, prob.n_workers)
+    rows, dt = _trajectory(step, init_gd(jnp.zeros(prob.d), prob.n_workers),
+                           prob, iters)
     out["GD"] = (rows, dt)
     return out
 
@@ -146,17 +157,60 @@ def ablation_dither_levels(prob, iters=200):
     for s in (4, 16, 64, 128):
         cfg = FlecsConfig(m=1, grad_compressor=f"dither{s}",
                           hess_compressor=f"dither{s}")
-        step = jax.jit(make_flecs_step(cfg, lg, lh))
-        st = init_state(jnp.zeros(prob.d), prob.n_workers)
-        key = jax.random.key(0)
-        for _ in range(iters):
-            key, sk = jax.random.split(key)
-            st, _ = step(st, sk)
+        step = make_flecs_step(cfg, lg, lh)
+        st, tr = run_experiment(step, init_state(jnp.zeros(prob.d),
+                                                 prob.n_workers),
+                                jax.random.key(0), iters,
+                                record=lambda st: prob.metrics(st.w))
         rows.append({"s": s,
-                     "F": float(prob.global_loss(st.w)),
-                     "grad_sq": float(jnp.sum(jnp.square(
-                         prob.global_grad(st.w)))),
-                     "Mbits": float(st.bits_per_node) / 1e6})
+                     "F": float(tr["F"][-1]),
+                     "grad_sq": float(tr["grad_sq"][-1]),
+                     "Mbits": float(jnp.max(st.bits_per_node)) / 1e6})
+    return rows
+
+
+def vmapped_grid(prob, iters=200):
+    """Beyond-paper: the whole step-size x dithering-level comparison grid
+    as ONE compiled vmapped scan (driver.run_sweep)."""
+    lg, lh = prob.make_oracles()
+    cfg = FlecsConfig(m=2, hess_compressor="dither64")
+    hp = hparam_grid([0.5, 1.0], [1.0], [16.0, 64.0, 128.0])
+    sweep = make_flecs_sweep_step(cfg, lg, lh)
+    t0 = time.perf_counter()
+    sts, tr = run_sweep(sweep, hp, init_state(jnp.zeros(prob.d),
+                                              prob.n_workers),
+                        jax.random.key(0), iters,
+                        record=lambda st: prob.metrics(st.w))
+    jax.block_until_ready(sts)
+    G = hp.alpha.shape[0]
+    dt = (time.perf_counter() - t0) / (iters * G) * 1e6
+    rows = [{"alpha": float(hp.alpha[g]), "grad_s": float(hp.grad_s[g]),
+             "F": float(tr["F"][g, -1]),
+             "grad_sq": float(tr["grad_sq"][g, -1]),
+             "Mbits": float(jnp.max(sts.bits_per_node[g])) / 1e6}
+            for g in range(G)]
+    return rows, dt
+
+
+def participation_ablation(prob, iters=300):
+    """Beyond-paper: client sampling p ∈ {1.0, 0.5, 0.25} — objective vs
+    the (now per-worker) cumulative bits ledger."""
+    lg, lh = prob.make_oracles()
+    rows = []
+    for p in (1.0, 0.5, 0.25):
+        cfg = FlecsConfig(m=2, alpha=1.0 if p == 1.0 else 0.5,
+                          grad_compressor="dither64",
+                          hess_compressor="dither64",
+                          participation=p, sampling="choice")
+        step = make_flecs_step(cfg, lg, lh)
+        st, tr = run_experiment(step, init_state(jnp.zeros(prob.d),
+                                                 prob.n_workers),
+                                jax.random.key(0), iters,
+                                record=lambda st: prob.metrics(st.w))
+        rows.append({"p": p, "F": float(tr["F"][-1]),
+                     "grad_sq": float(tr["grad_sq"][-1]),
+                     "Mbits_mean": float(jnp.mean(st.bits_per_node)) / 1e6,
+                     "active_mean": float(jnp.mean(tr["n_active"]))})
     return rows
 
 
@@ -207,6 +261,25 @@ def run(csv_rows: list):
               f"Mbits={r['Mbits']:.2f}")
         csv_rows.append((f"ablation/dither-s{r['s']}", 0.0,
                          f"F={r['F']:.5f};Mbits={r['Mbits']:.2f}"))
+
+    grid, dt_g = vmapped_grid(prob)
+    json.dump(grid, open(OUT / "vmapped_grid.json", "w"), indent=1)
+    print("\n=== Vmapped sweep: alpha x dither-level grid, ONE program ===")
+    for r in grid:
+        print(f"  alpha={r['alpha']:.1f} s={r['grad_s']:4.0f}: "
+              f"F={r['F']:.5f} Mbits={r['Mbits']:.2f}")
+        csv_rows.append((f"grid/a{r['alpha']}-s{r['grad_s']:.0f}", dt_g,
+                         f"F={r['F']:.5f}"))
+
+    part = participation_ablation(prob)
+    json.dump(part, open(OUT / "participation.json", "w"), indent=1)
+    print("\n=== Partial participation (choice sampling, beyond-paper) ===")
+    for r in part:
+        print(f"  p={r['p']:4.2f}: F@300={r['F']:.5f} "
+              f"Mbits/node(mean)={r['Mbits_mean']:.2f} "
+              f"active/round={r['active_mean']:.1f}")
+        csv_rows.append((f"participation/p{r['p']}", 0.0,
+                         f"F={r['F']:.5f};Mbits={r['Mbits_mean']:.2f}"))
 
     base = baselines_comparison(prob)
     json.dump({k: v[0] for k, v in base.items()},

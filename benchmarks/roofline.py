@@ -34,6 +34,10 @@ def kind_of(shape):
 
 
 def render(csv_rows=None, fh=None):
+    if not RESULTS.exists():
+        print(f"\n=== §Roofline: skipped — {RESULTS.name} not found "
+              f"(generate it with the launch dry-run first) ===", file=fh)
+        return
     data = json.loads(RESULTS.read_text())
     data = [r for r in data if not r.get("flecs")]
     data.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))

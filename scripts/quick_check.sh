@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Fast tier: collection + the non-slow tests in under a minute, so
+# collection-time breakage (e.g. a missing optional dep) surfaces
+# immediately instead of hiding behind the full 5-minute run.
+#
+# The quick tier is dominated by independent jit compiles, so the test
+# files are sharded across two pytest processes (one per core).  Each
+# shard keeps -x fail-fast semantics; output is serialized per shard.
+#
+#   scripts/quick_check.sh [extra pytest args...]
+set -uo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+shards=2
+# static partition balanced on measured non-slow durations (the federated
+# engine files dominate); files not listed fall into shard 0/1 alternately
+shard0="tests/test_flecs_convergence.py tests/test_comm_accounting.py \
+tests/test_sharding_and_loss.py tests/test_checkpoint_and_configs.py \
+tests/test_compressors.py tests/test_system.py"
+shard1="tests/test_driver.py tests/test_kernels.py \
+tests/test_attention_and_mixers.py tests/test_core_algebra.py \
+tests/test_models_smoke.py"
+groups=("$shard0" "$shard1")
+i=0
+for f in tests/test_*.py; do
+    if [[ " $shard0 $shard1 " != *" $f "* ]]; then
+        groups[$((i % shards))]+=" $f"
+        i=$((i + 1))
+    fi
+done
+
+pids=()
+logs=()
+for ((i = 0; i < shards; i++)); do
+    log="$(mktemp)"
+    logs+=("$log")
+    # shellcheck disable=SC2086  # word-splitting the group is intended
+    python -m pytest -q -x -m "not slow" "$@" ${groups[$i]} >"$log" 2>&1 &
+    pids+=($!)
+done
+
+rc=0
+for ((i = 0; i < shards; i++)); do
+    st=0
+    wait "${pids[$i]}" || st=$?
+    # exit code 5 = shard had every test deselected; that is fine
+    if [[ $st -ne 0 && $st -ne 5 ]]; then rc=1; fi
+    cat "${logs[$i]}"
+    rm -f "${logs[$i]}"
+done
+exit $rc

@@ -1,0 +1,42 @@
+"""Version compatibility shims for the installed jax.
+
+``jax.shard_map`` (top-level, with ``axis_names``/``check_vma``) only
+exists from jax 0.5; on 0.4.x the same feature lives at
+``jax.experimental.shard_map.shard_map`` with ``auto``/``check_rep``
+(``auto`` is the complement of ``axis_names``: the mesh axes that stay
+under GSPMD instead of going manual).  All shard_map call sites in this
+repo go through :func:`shard_map` so the suite runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """jax.shard_map with the ≥0.5 keyword surface on any installed jax.
+
+    axis_names: mesh axes to run manually (None => all of them).
+    check_vma:  the ≥0.5 name for 0.4's check_rep.
+    """
+    if hasattr(jax, "shard_map"):  # jax >= 0.5
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma, auto=auto)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` (≥0.5) on any jax: the size of a mapped mesh
+    axis from inside shard_map.  On 0.4.x, psum of 1 over the axis — jax
+    resolves it to a compile-time constant."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -2,12 +2,19 @@
 
 Exact mode (paper-scale problems):
     from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
+Experiment engine (lax.scan runs, client sampling, vmapped sweeps):
+    from repro.core.driver import run_experiment, run_sweep
 DL-scale trainer (TPU-pod realization):
     from repro.core.dl_flecs import FlecsDLConfig, make_flecs_train_step
 """
 from repro.core.compressors import Compressor, get_compressor
-from repro.core.flecs import FlecsConfig, FlecsState, init_state, make_flecs_step
+from repro.core.driver import (participation_mask, run_experiment, run_sweep)
+from repro.core.flecs import (FlecsConfig, FlecsHParams, FlecsState,
+                              bits_per_round, hparam_grid, init_state,
+                              make_flecs_step, make_flecs_sweep_step)
 from repro.core.sketch import sketch
 
-__all__ = ["Compressor", "get_compressor", "FlecsConfig", "FlecsState",
-           "init_state", "make_flecs_step", "sketch"]
+__all__ = ["Compressor", "get_compressor", "FlecsConfig", "FlecsHParams",
+           "FlecsState", "bits_per_round", "hparam_grid", "init_state",
+           "make_flecs_step", "make_flecs_sweep_step", "participation_mask",
+           "run_experiment", "run_sweep", "sketch"]

@@ -61,6 +61,21 @@ def _dither(key, x, s: int):
     return out.astype(x.dtype)
 
 
+def dither(key, x, s):
+    """Random dithering with a possibly *traced* level count s.
+
+    Same math as ``random_dithering(s).compress`` but s may be a jnp scalar,
+    which is what lets ``jax.vmap`` sweep compressor levels inside one
+    compiled program (see ``repro.core.flecs.make_flecs_sweep_step``).
+    """
+    return _dither(key, x, s)
+
+
+def dither_bits(s):
+    """Wire bits/value of s-level dithering, ceil(log2(2s+1)); traced-safe."""
+    return jnp.ceil(jnp.log2(2.0 * s + 1.0))
+
+
 def random_dithering(s: int = 64) -> Compressor:
     """∞-norm random dithering with s levels.  Payload: sign+level fits in
     ceil(log2(2s+1)) bits (+32 for the norm, amortized)."""

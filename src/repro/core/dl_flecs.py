@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size, shard_map
 from repro.configs.base import ModelConfig
 from repro.models.context import ModelContext
 from repro.train.step import _loss_fn
@@ -132,7 +133,7 @@ def make_flecs_train_step(cfg: ModelConfig, ctx: ModelContext,
         key0 = jax.random.fold_in(jax.random.key(29), step_idx)
         n = 1
         for a in axes:
-            n *= jax.lax.axis_size(a)
+            n *= axis_size(a)
 
         # --- compressed gradient differences (the CGD contribution) -------
         g_tilde, new_own, new_mean = [], [], []
@@ -236,7 +237,7 @@ def make_flecs_train_step(cfg: ModelConfig, ctx: ModelContext,
         bspec = jax.tree.map(
             lambda s: s.spec if hasattr(s, "spec") else s, bshard,
             is_leaf=lambda s: isinstance(s, (jax.sharding.NamedSharding, P)))
-        smapped = jax.shard_map(
+        smapped = shard_map(
             body, mesh=mesh,
             in_specs=(prep, sspec, bspec, P()),
             out_specs=(prep, sspec, P()),

@@ -1,0 +1,151 @@
+"""Scan-based federated experiment engine.
+
+Every experiment surface in this repo (tests, examples, benchmarks) drives
+federated optimization steps of the uniform shape
+
+    step(state, key) -> (state, aux)
+
+Historically each surface ran its own Python ``for`` loop around a jitted
+step — hundreds of device dispatches per run and a fresh compile per call
+site.  This module replaces all of those loops with **one** compiled
+``lax.scan`` program per run:
+
+* :func:`run_experiment` — scan a step for K rounds, stacking per-iteration
+  traces (loss, gradient norm, bits/node, …) through the scan ys.  Extra
+  quantities (e.g. the global objective) are recorded inside the scan via
+  the ``record`` callback, so the host never re-enters the device between
+  rounds.
+* :func:`run_sweep` — vmap a whole hyperparameter grid of independent runs
+  (step sizes, dithering levels) over the scan, so a Figure-1-style
+  comparison grid is a single device program.
+* :func:`participation_mask` — per-round client-sampling masks (Bernoulli
+  or exact-k choice), the partial-participation axis used by
+  ``repro.core.flecs`` and ``repro.optim.baselines``.  Workers outside the
+  sampled set neither contribute to the server aggregate nor pay
+  communication bits that round.
+
+Example (FLECS-CGD with half the clients sampled each round)::
+
+    from repro.core.driver import run_experiment
+    from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
+
+    cfg = FlecsConfig(m=2, participation=0.5)
+    step = make_flecs_step(cfg, local_grad, local_hvp)
+    state, traces = run_experiment(
+        step, init_state(w0, n_workers), jax.random.key(0), iters=250,
+        record=lambda st: {"F": prob.global_loss(st.w)})
+    # traces["F"]: [250] objective trajectory
+    # traces["bits_per_node"]: [250, n] cumulative bits, 0-increment for
+    #                          workers skipped by the sampler that round.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def bits_dtype():
+    """Accumulator dtype for cumulative bit counters.
+
+    float32 loses integer bit counts past 2^24 (reachable in long sweeps on
+    the d=20958 problems), so use f64 whenever x64 is enabled.  All
+    ``bits_per_node`` fields in ``flecs.py`` / ``baselines.py`` share this.
+    """
+    return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+
+def participation_mask(key, n: int, p: float = 1.0,
+                       kind: str = "bernoulli") -> jnp.ndarray:
+    """Per-round client-sampling mask, [n] float32 in {0, 1}.
+
+    p >= 1 returns all-ones (full participation, key unused).
+    kind="bernoulli": each worker participates independently w.p. p (the
+        round may sample zero workers; aggregation guards handle that).
+    kind="choice": exactly max(1, round(p*n)) workers, uniformly without
+        replacement (FedLab-style client sampling).
+    """
+    if p >= 1.0:
+        return jnp.ones((n,), jnp.float32)
+    if kind == "bernoulli":
+        return (jax.random.uniform(key, (n,)) < p).astype(jnp.float32)
+    if kind == "choice":
+        k = max(1, int(round(p * n)))
+        perm = jax.random.permutation(key, n)
+        return (perm < k).astype(jnp.float32)
+    raise ValueError(f"unknown sampling kind: {kind!r}")
+
+
+def masked_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Mean of x over the sampled workers (leading axis n).
+
+    mask: [n] in {0,1}.  An all-zero mask yields zeros (no division by 0),
+    which downstream direction computations map to a no-op round.
+    """
+    shape = (-1,) + (1,) * (x.ndim - 1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(mask.reshape(shape) * x, axis=0) / denom
+
+
+def _scan_body(step: Callable, record: Optional[Callable]):
+    """Shared scan body: one round + optional in-scan trace recording."""
+    def body(st, k):
+        st, aux = step(st, k)
+        if record is not None:
+            aux = {**aux, **record(st)}
+        return st, aux
+    return body
+
+
+def run_experiment(step: Callable, state, key, iters: int,
+                   record: Optional[Callable] = None):
+    """Run ``step`` for ``iters`` rounds in one compiled lax.scan program.
+
+    step:   (state, key) -> (state, aux) — aux is a pytree of per-round
+            scalars/vectors; the scan stacks it into [iters, ...] traces.
+    record: optional (state) -> dict of extra trace entries evaluated
+            *inside* the scan after each round (e.g. global loss), merged
+            into aux.  Keys shadow aux keys on collision.
+    Returns (final_state, traces).
+    """
+    keys = jax.random.split(key, iters)
+    body = _scan_body(step, record)
+    run = jax.jit(lambda st, ks: jax.lax.scan(body, st, ks))
+    return run(state, keys)
+
+
+def run_sweep(sweep_step: Callable, hparams, state, key, iters: int,
+              record: Optional[Callable] = None):
+    """Vmapped hyperparameter sweep: a grid of runs as ONE device program.
+
+    sweep_step: (hp, state, key) -> (state, aux), e.g. from
+                ``repro.core.flecs.make_flecs_sweep_step`` — hp fields
+                (step sizes, dithering levels) are traced, so one compiled
+                program serves the whole grid.
+    hparams:    pytree whose leaves share a leading grid axis [G, ...]
+                (e.g. a ``FlecsHParams`` of [G] arrays).
+    state:      a single initial state, shared by every grid point.
+    Returns (final_states, traces) with leading grid axis [G, ...] /
+    [G, iters, ...].  Each grid point gets an independent key stream.
+    """
+    G = jax.tree.leaves(hparams)[0].shape[0]
+    keys = jax.vmap(lambda k: jax.random.split(k, iters))(
+        jax.random.split(key, G))
+
+    def one(hp, ks):
+        body = _scan_body(lambda st, k: sweep_step(hp, st, k), record)
+        return jax.lax.scan(body, state, ks)
+
+    return jax.jit(jax.vmap(one))(hparams, keys)
+
+
+def iters_for_bit_budget(budget: float, bits_per_round: float) -> int:
+    """Smallest round count whose cumulative per-node bits reach ``budget``.
+
+    Per-round bits are deterministic for every method here, so a
+    while-on-bits Python loop is equivalent to a fixed-length scan of this
+    many rounds (full participation).
+    """
+    import math
+    return max(1, math.ceil(budget / bits_per_round))

@@ -12,13 +12,25 @@ iterate updates (Alg 4 truncated inverse / Alg 5 FedSONIA), selected in
 `FlecsConfig` exactly as in the paper's experiment grid.
 
 Everything is jit-compatible; worker loops are vmapped (the n workers of a
-federation are a batch dim here).
+federation are a batch dim here) and whole experiments run under
+``repro.core.driver.run_experiment`` (lax.scan — no Python step loops).
 
-Communication accounting (per worker per iteration, bits):
+Partial participation (beyond-paper axis, FedNL/FedLab-style): set
+``FlecsConfig.participation < 1`` and each round draws a client mask via
+``driver.participation_mask``.  Only sampled workers contribute to the
+server aggregates (g̃, Ỹ, M̄, B̄), update their shift h^i / approximation
+B^i, and pay communication bits; skipped workers are charged zero bits.
+
+Communication accounting (per *participating* worker per iteration, bits;
+``FlecsState.bits_per_node`` is a per-worker [n] vector):
   c_k^i : d values   x c bits        (gradient difference, compressed)
   C_k^i : d·m values x c bits        (sketched-Hessian difference, compressed)
   M_k^i : m² float32
   FLECS sends the gradient uncompressed: d x 32 instead of d x c.
+
+Hyperparameter sweeps: ``make_flecs_sweep_step`` builds a step whose step
+sizes and gradient dithering level are *traced* (``FlecsHParams``), so
+``driver.run_sweep`` can vmap a whole grid through one compiled program.
 """
 from __future__ import annotations
 
@@ -28,10 +40,12 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import Compressor, get_compressor
+from repro.core.compressors import (Compressor, dither, dither_bits,
+                                    get_compressor)
 from repro.core.directions import (fedsonia_direction,
                                    truncated_inverse_direction,
                                    truncated_inverse_direction_floored)
+from repro.core.driver import bits_dtype, masked_mean, participation_mask
 from repro.core.sketch import sketch
 from repro.core.updates import direct_update, truncated_lsr1_update
 
@@ -52,10 +66,34 @@ class FlecsConfig:
     sketch_kind: str = "rademacher"
     tinv_floor: float = 0.0           # curvature floor for Alg 4 (see
                                       # directions.truncated_inverse_direction_floored)
+    participation: float = 1.0        # per-round client sampling probability
+    sampling: str = "bernoulli"       # "bernoulli" | "choice" (exact-k)
 
     @property
     def rho_val(self):
         return 1.0 / self.Omega if self.rho is None else self.rho
+
+
+class FlecsHParams(NamedTuple):
+    """Traced hyperparameters for vmapped sweeps (see ``run_sweep``).
+
+    All fields are float scalars (or [G] arrays across a grid axis):
+      alpha  — iterate step size
+      gamma  — shift learning rate
+      grad_s — gradient dithering level count s (bits = ceil(log2(2s+1)))
+    """
+    alpha: jnp.ndarray
+    gamma: jnp.ndarray
+    grad_s: jnp.ndarray
+
+
+def hparam_grid(alphas, gammas, grad_levels) -> FlecsHParams:
+    """Cartesian product of the three sweep axes, flattened to [G] arrays."""
+    a, g, s = jnp.meshgrid(jnp.asarray(alphas, jnp.float32),
+                           jnp.asarray(gammas, jnp.float32),
+                           jnp.asarray(grad_levels, jnp.float32),
+                           indexing="ij")
+    return FlecsHParams(a.ravel(), g.ravel(), s.ravel())
 
 
 class FlecsState(NamedTuple):
@@ -63,7 +101,7 @@ class FlecsState(NamedTuple):
     h: jnp.ndarray        # [n, d]   per-worker gradient shifts
     B: jnp.ndarray        # [n, d, d] per-worker Hessian approximations
     k: jnp.ndarray        # iteration counter
-    bits_per_node: jnp.ndarray   # cumulative communicated bits per worker
+    bits_per_node: jnp.ndarray   # [n] cumulative communicated bits per worker
 
 
 def init_state(w0: jnp.ndarray, n_workers: int) -> FlecsState:
@@ -73,80 +111,126 @@ def init_state(w0: jnp.ndarray, n_workers: int) -> FlecsState:
         h=jnp.zeros((n_workers, d), jnp.float32),
         B=jnp.zeros((n_workers, d, d), jnp.float32),
         k=jnp.zeros((), jnp.int32),
-        bits_per_node=jnp.zeros((), jnp.float64 if jax.config.jax_enable_x64
-                                else jnp.float32),
+        bits_per_node=jnp.zeros((n_workers,), bits_dtype()),
     )
+
+
+def bits_per_round(cfg: FlecsConfig, d: int) -> float:
+    """Deterministic per-participating-worker uplink bits of one round."""
+    Q = get_compressor(cfg.grad_compressor)
+    C = get_compressor(cfg.hess_compressor)
+    return (d * Q.bits_per_value + d * cfg.m * C.bits_per_value
+            + cfg.m * cfg.m * 32.0)
+
+
+def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
+                 q_compress: Callable, q_bits, hess_C: Compressor,
+                 state: FlecsState, key, alpha, gamma):
+    """One round of Algorithm 1 with client sampling.
+
+    q_compress/q_bits and alpha/gamma may be traced (sweep path) or
+    Python/static (plain ``make_flecs_step`` path); everything else comes
+    from cfg.
+    """
+    n, d = state.h.shape
+    m = cfg.m
+    S = sketch(cfg.sketch_kind, d, m, state.k)          # shared via seed
+
+    k_g, k_h, k_q, k_c, k_p = jax.random.split(key, 5)
+    mask = participation_mask(k_p, n, cfg.participation, cfg.sampling)  # [n]
+
+    def worker(i, hk, Bk, kq, kc):
+        g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
+        Y = local_hvp(state.w, S, i, jax.random.fold_in(k_h, i))
+        M = S.T @ Y                                     # m x m (exact)
+        c = q_compress(kq, g - hk)                      # compressed grad diff
+        BS = Bk @ S
+        Cm = hess_C.compress(kc, Y - BS)                # compressed hess diff
+        return c, M, Cm, BS
+
+    ks_q = jax.random.split(k_q, n)
+    ks_c = jax.random.split(k_c, n)
+    c_all, M_all, C_all, BS_all = jax.vmap(worker)(
+        jnp.arange(n), state.h, state.B, ks_q, ks_c)
+
+    # --- server -----------------------------------------------------------
+    g_tilde_i = c_all + state.h                          # [n, d]
+    Y_tilde_i = C_all + BS_all                           # [n, d, m]
+
+    if cfg.hessian_update == "direct":
+        B_upd = jax.vmap(
+            lambda B, Y, M: direct_update(B, Y, M, cfg.beta))(
+                state.B, Y_tilde_i, M_all)
+    else:
+        B_upd = jax.vmap(
+            lambda B, Y, M: truncated_lsr1_update(B, Y, M, S,
+                                                  cfg.omega)[0])(
+                state.B, Y_tilde_i, M_all)
+    # only sampled workers communicated a Hessian difference this round
+    B_new = jnp.where(mask[:, None, None] > 0, B_upd, state.B)
+
+    g_tilde = masked_mean(g_tilde_i, mask)
+    Y_tilde = masked_mean(Y_tilde_i, mask)
+    M_bar = masked_mean(M_all, mask)
+    B_bar = masked_mean(B_new, mask)
+
+    if cfg.direction == "truncated_inverse":
+        if cfg.tinv_floor > 0:
+            p = truncated_inverse_direction_floored(
+                B_bar, g_tilde, cfg.omega, cfg.Omega, cfg.tinv_floor)
+        else:
+            p = truncated_inverse_direction(B_bar, g_tilde, cfg.omega,
+                                            cfg.Omega)
+    else:
+        p = fedsonia_direction(Y_tilde, M_bar, g_tilde, cfg.omega,
+                               cfg.Omega, cfg.rho_val)
+
+    w_new = state.w + alpha * p
+    h_new = state.h + gamma * mask[:, None] * c_all
+
+    round_bits = (d * q_bits                    # c_k^i
+                  + d * m * hess_C.bits_per_value   # C_k^i
+                  + m * m * 32.0)                   # M_k^i (float32)
+    bits_new = (state.bits_per_node
+                + mask.astype(state.bits_per_node.dtype) * round_bits)
+    new_state = FlecsState(w_new, h_new, B_new, state.k + 1, bits_new)
+    aux = {"g_tilde_norm": jnp.linalg.norm(g_tilde),
+           "dir_norm": jnp.linalg.norm(p),
+           "n_active": jnp.sum(mask),
+           "bits_per_node": new_state.bits_per_node}
+    return new_state, aux
 
 
 def make_flecs_step(cfg: FlecsConfig,
                     local_grad: Callable,      # (w, worker_id, key) -> g
                     local_hvp: Callable):      # (w, V[d,m], worker_id, key) -> HV
-    """Build a jit-able step(state, key) -> (state, aux)."""
+    """Build a jit/scan-able step(state, key) -> (state, aux)."""
     Q = get_compressor(cfg.grad_compressor)
     C = get_compressor(cfg.hess_compressor)
 
     def step(state: FlecsState, key) -> tuple:
-        n, d = state.h.shape
-        m = cfg.m
-        S = sketch(cfg.sketch_kind, d, m, state.k)          # shared via seed
+        return _flecs_round(cfg, local_grad, local_hvp, Q.compress,
+                            Q.bits_per_value, C, state, key,
+                            cfg.alpha, cfg.gamma)
 
-        k_g, k_h, k_q, k_c = jax.random.split(key, 4)
+    return step
 
-        def worker(i, hk, Bk, kq, kc):
-            g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
-            Y = local_hvp(state.w, S, i, jax.random.fold_in(k_h, i))
-            M = S.T @ Y                                     # m x m (exact)
-            c = Q.compress(kq, g - hk)                      # compressed grad diff
-            BS = Bk @ S
-            Cm = C.compress(kc, Y - BS)                     # compressed hess diff
-            return c, M, Cm, BS
 
-        ks_q = jax.random.split(k_q, n)
-        ks_c = jax.random.split(k_c, n)
-        c_all, M_all, C_all, BS_all = jax.vmap(worker)(
-            jnp.arange(n), state.h, state.B, ks_q, ks_c)
+def make_flecs_sweep_step(cfg: FlecsConfig, local_grad: Callable,
+                          local_hvp: Callable):
+    """Build step(hp: FlecsHParams, state, key) -> (state, aux) whose step
+    sizes and gradient dithering level are traced, for ``driver.run_sweep``.
 
-        # --- server ---------------------------------------------------------
-        g_tilde_i = c_all + state.h                          # [n, d]
-        Y_tilde_i = C_all + BS_all                           # [n, d, m]
+    The gradient compressor is always dynamic random dithering at
+    ``hp.grad_s`` levels (``cfg.grad_compressor`` is ignored on this path);
+    the Hessian compressor and everything else stay static from cfg.
+    """
+    C = get_compressor(cfg.hess_compressor)
 
-        if cfg.hessian_update == "direct":
-            B_new = jax.vmap(
-                lambda B, Y, M: direct_update(B, Y, M, cfg.beta))(
-                    state.B, Y_tilde_i, M_all)
-        else:
-            B_new = jax.vmap(
-                lambda B, Y, M: truncated_lsr1_update(B, Y, M, S,
-                                                      cfg.omega)[0])(
-                    state.B, Y_tilde_i, M_all)
-
-        g_tilde = jnp.mean(g_tilde_i, axis=0)
-        Y_tilde = jnp.mean(Y_tilde_i, axis=0)
-        M_bar = jnp.mean(M_all, axis=0)
-        B_bar = jnp.mean(B_new, axis=0)
-
-        if cfg.direction == "truncated_inverse":
-            if cfg.tinv_floor > 0:
-                p = truncated_inverse_direction_floored(
-                    B_bar, g_tilde, cfg.omega, cfg.Omega, cfg.tinv_floor)
-            else:
-                p = truncated_inverse_direction(B_bar, g_tilde, cfg.omega,
-                                                cfg.Omega)
-        else:
-            p = fedsonia_direction(Y_tilde, M_bar, g_tilde, cfg.omega,
-                                   cfg.Omega, cfg.rho_val)
-
-        w_new = state.w + cfg.alpha * p
-        h_new = state.h + cfg.gamma * c_all
-
-        bits = (d * Q.bits_per_value            # c_k^i
-                + d * m * C.bits_per_value      # C_k^i
-                + m * m * 32.0)                 # M_k^i (float32)
-        new_state = FlecsState(w_new, h_new, B_new, state.k + 1,
-                               state.bits_per_node + bits)
-        aux = {"g_tilde_norm": jnp.linalg.norm(g_tilde),
-               "dir_norm": jnp.linalg.norm(p),
-               "bits_per_node": new_state.bits_per_node}
-        return new_state, aux
+    def step(hp: FlecsHParams, state: FlecsState, key) -> tuple:
+        return _flecs_round(
+            cfg, local_grad, local_hvp,
+            lambda k, x: dither(k, x, hp.grad_s), dither_bits(hp.grad_s),
+            C, state, key, hp.alpha, hp.gamma)
 
     return step

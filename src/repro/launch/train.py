@@ -86,12 +86,15 @@ def main():
                 print(f"step {i:4d} loss {float(m['loss']):.4f}")
     else:
         opt = get_optimizer(args.optimizer, args.lr)
-        opt_state = jax.device_put(
-            opt.init(params),
-            named_shardings(jax.eval_shape(opt.init, pa), mesh))
+        oshard = named_shardings(jax.eval_shape(opt.init, pa), mesh)
+        opt_state = jax.device_put(opt.init(params), oshard)
+        # out_shardings pinned to the inputs' shardings: otherwise the
+        # compiler may commit the step outputs to different shardings and
+        # the next call fails the strict in_shardings check (jax 0.4.x).
         step = jax.jit(make_train_step(cfg, ctx, opt,
                                        microbatches=args.microbatches),
-                       in_shardings=(pshard, None, bshard))
+                       in_shardings=(pshard, oshard, bshard),
+                       out_shardings=(pshard, oshard, None))
         for i in range(args.steps):
             params, opt_state, m = step(params, opt_state, batch())
             if i % 5 == 0 or i == args.steps - 1:

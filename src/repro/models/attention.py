@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size, shard_map
 from repro.models.layers import apply_rope, softcap
 
 NEG = -1e30
@@ -138,7 +139,7 @@ def attend_cache(q, k_cache, v_cache, n_valid, *, cap=0.0, axis_name=None):
         axes = axis_name if isinstance(axis_name, tuple) else (axis_name,)
         shard = jnp.zeros((), jnp.int32)
         for a in axes:
-            shard = shard * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            shard = shard * axis_size(a) + jax.lax.axis_index(a)
         valid = (shard * S + jnp.arange(S)) < n_valid
     s = jnp.where(valid[None, None, None, :], s, NEG)
     m = jnp.max(s, axis=-1)
@@ -223,7 +224,7 @@ def attn_decode(params, x, cache, pos, cfg, *, window=0, ctx=None,
             S_loc = kc.shape[1]
             shard = jnp.zeros((), jnp.int32)
             for a in axes:
-                shard = shard * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+                shard = shard * axis_size(a) + jax.lax.axis_index(a)
             local_slot = pos_.astype(jnp.int32) - shard * S_loc
             in_range = (local_slot >= 0) & (local_slot < S_loc)
             ls = jnp.clip(local_slot, 0, S_loc - 1)
@@ -236,7 +237,7 @@ def attn_decode(params, x, cache, pos, cfg, *, window=0, ctx=None,
                              axis_name=axes if len(axes) > 1 else axes[0])
             return o, kc, vc
 
-        o, k_cache, v_cache = jax.shard_map(
+        o, k_cache, v_cache = shard_map(
             inner, mesh=ctx.mesh,
             in_specs=(cache_spec, cache_spec, P(), P(), P(), P()),
             out_specs=(P(), cache_spec, cache_spec),

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import shard_map
 from repro.configs.base import (ATTN_GLOBAL, ATTN_LOCAL, ATTN_MLA, FFN_DENSE,
                                 FFN_MOE, FFN_NONE, RGLRU, SSM, ModelConfig)
 from repro.models import attention as attn_mod
@@ -178,7 +179,7 @@ def _moe_call(p, x, cfg, ctx: ModelContext):
             "w_up": P(ctx.model_axis, None, "data"),
             "w_down": P(ctx.model_axis, "data", None),
         }
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             fn, mesh=ctx.mesh,
             in_specs=(fspec, P(ctx.data_axes, None)),
             out_specs=(P(ctx.data_axes, None), P()),
@@ -208,7 +209,7 @@ def _moe_call(p, x, cfg, ctx: ModelContext):
         "w_up": P(ctx.model_axis, gather_axis, None),
         "w_down": P(ctx.model_axis, None, gather_axis),
     }
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         fn, mesh=ctx.mesh,
         in_specs=(wspec, P(token_axes, None)),
         out_specs=(P(token_axes, None), P()),

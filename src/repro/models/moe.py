@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size
 from repro.models.layers import act_fn
 
 
@@ -253,7 +254,7 @@ def moe_fshard(params, x, cfg, *, model_axis, data_axes, n_model, n_data):
 
     didx = jnp.zeros((), jnp.int32)
     for a in data_axes:
-        didx = didx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        didx = didx * axis_size(a) + jax.lax.axis_index(a)
     out = jax.lax.dynamic_slice_in_dim(out_full, didx * T_loc, T_loc, 0)
     frac = jnp.mean(jax.nn.one_hot(ids[:, 0], E), axis=0)
     aux = E * jnp.sum(frac * jnp.mean(probs, axis=0))

@@ -7,8 +7,15 @@
 * DistributedGD — uncompressed synchronous gradient descent.
 
 All share the (local_grad, local_hvp) oracle interface of
-``repro.core.flecs`` and report per-node communicated bits, so the
-benchmark plots share an x-axis.
+``repro.core.flecs``, run under ``repro.core.driver.run_experiment``
+(lax.scan), and report per-node communicated bits as a per-worker [n]
+vector (``bits_per_node``), so the benchmark plots share an x-axis.
+
+Partial participation: every step maker takes ``participation``/``sampling``
+kwargs (see ``driver.participation_mask``).  Only sampled workers enter the
+server aggregate, update their local server-side state (DIANA shift h^i,
+FedNL Hessian H^i), and pay bits; skipped workers are charged zero bits
+that round.
 """
 from __future__ import annotations
 
@@ -19,34 +26,40 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import get_compressor
+from repro.core.driver import bits_dtype, masked_mean, participation_mask
 
 
 class DianaState(NamedTuple):
     w: jnp.ndarray
     h: jnp.ndarray          # [n, d]
     k: jnp.ndarray
-    bits_per_node: jnp.ndarray
+    bits_per_node: jnp.ndarray   # [n]
 
 
 def make_diana_step(alpha: float, gamma: float, compressor: str,
-                    local_grad: Callable):
+                    local_grad: Callable, participation: float = 1.0,
+                    sampling: str = "bernoulli"):
     Q = get_compressor(compressor)
 
     def step(state: DianaState, key):
         n, d = state.h.shape
+        k_g, k_q, k_p = jax.random.split(key, 3)
+        mask = participation_mask(k_p, n, participation, sampling)
 
         def worker(i, hk, kq):
-            g = local_grad(state.w, i, jax.random.fold_in(key, i))
+            g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
             return Q.compress(kq, g - hk)
 
-        ks = jax.random.split(jax.random.fold_in(key, 1), n)
+        ks = jax.random.split(k_q, n)
         c = jax.vmap(worker)(jnp.arange(n), state.h, ks)
-        g_tilde = jnp.mean(c + state.h, axis=0)
+        g_tilde = masked_mean(c + state.h, mask)
         w = state.w - alpha * g_tilde
-        h = state.h + gamma * c
-        bits = d * Q.bits_per_value
-        new = DianaState(w, h, state.k + 1, state.bits_per_node + bits)
+        h = state.h + gamma * mask[:, None] * c
+        bits = state.bits_per_node + mask.astype(
+            state.bits_per_node.dtype) * (d * Q.bits_per_value)
+        new = DianaState(w, h, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
+                     "n_active": jnp.sum(mask),
                      "bits_per_node": new.bits_per_node}
 
     return step
@@ -55,45 +68,52 @@ def make_diana_step(alpha: float, gamma: float, compressor: str,
 def init_diana(w0, n_workers):
     return DianaState(w0.astype(jnp.float32),
                       jnp.zeros((n_workers, w0.shape[0]), jnp.float32),
-                      jnp.zeros((), jnp.int32), jnp.zeros(()))
+                      jnp.zeros((), jnp.int32),
+                      jnp.zeros((n_workers,), bits_dtype()))
 
 
 class FedNLState(NamedTuple):
     w: jnp.ndarray
     H: jnp.ndarray          # [n, d, d] per-worker Hessian estimates
     k: jnp.ndarray
-    bits_per_node: jnp.ndarray
+    bits_per_node: jnp.ndarray   # [n]
 
 
 def make_fednl_step(alpha: float, compressor: str, local_grad: Callable,
-                    local_hessian: Callable, mu: float):
+                    local_hessian: Callable, mu: float,
+                    participation: float = 1.0, sampling: str = "bernoulli"):
     """FedNL (option with projection/regularized direction):
     H^i_{k+1} = H^i_k + C(∇²f_i(w_k) - H^i_k);  w⁺ = w - α [H̄]_μ^{-1} ḡ."""
     C = get_compressor(compressor)
 
     def step(state: FedNLState, key):
         n, d = state.H.shape[:2]
+        k_g, k_c, k_p = jax.random.split(key, 3)
+        mask = participation_mask(k_p, n, participation, sampling)
 
         def worker(i, Hk, kc):
-            g = local_grad(state.w, i, jax.random.fold_in(key, i))
+            g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
             Hi = local_hessian(state.w, i)
             D = C.compress(kc, Hi - Hk)
             return g, D
 
-        ks = jax.random.split(jax.random.fold_in(key, 1), n)
+        ks = jax.random.split(k_c, n)
         g_all, D_all = jax.vmap(worker)(jnp.arange(n), state.H, ks)
-        H_new = state.H + D_all
-        g_bar = jnp.mean(g_all, axis=0)
-        H_bar = jnp.mean(H_new, axis=0)
+        H_new = state.H + mask[:, None, None] * D_all
+        g_bar = masked_mean(g_all, mask)
+        H_bar = masked_mean(H_new, mask)
         # positive-definite safeguard: H̄ + μI on the symmetric part
         Hs = 0.5 * (H_bar + H_bar.T) + mu * jnp.eye(d)
         lam, V = jnp.linalg.eigh(Hs)
         lam = jnp.maximum(jnp.abs(lam), mu)
         p = -(V @ ((V.T @ g_bar) / lam))
         w = state.w + alpha * p
-        bits = d * 32.0 + d * d * C.bits_per_value
-        new = FedNLState(w, H_new, state.k + 1, state.bits_per_node + bits)
+        bits = state.bits_per_node + mask.astype(
+            state.bits_per_node.dtype) * (d * 32.0
+                                          + d * d * C.bits_per_value)
+        new = FedNLState(w, H_new, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_bar),
+                     "n_active": jnp.sum(mask),
                      "bits_per_node": new.bits_per_node}
 
     return step
@@ -103,29 +123,36 @@ def init_fednl(w0, n_workers):
     d = w0.shape[0]
     return FedNLState(w0.astype(jnp.float32),
                       jnp.zeros((n_workers, d, d), jnp.float32),
-                      jnp.zeros((), jnp.int32), jnp.zeros(()))
+                      jnp.zeros((), jnp.int32),
+                      jnp.zeros((n_workers,), bits_dtype()))
 
 
 class GDState(NamedTuple):
     w: jnp.ndarray
     k: jnp.ndarray
-    bits_per_node: jnp.ndarray
+    bits_per_node: jnp.ndarray   # [n]
 
 
-def make_gd_step(alpha: float, local_grad: Callable, n_workers: int):
+def make_gd_step(alpha: float, local_grad: Callable, n_workers: int,
+                 participation: float = 1.0, sampling: str = "bernoulli"):
     def step(state: GDState, key):
         d = state.w.shape[0]
-        g = jnp.mean(jax.vmap(
-            lambda i: local_grad(state.w, i, jax.random.fold_in(key, i)))(
-                jnp.arange(n_workers)), axis=0)
-        new = GDState(state.w - alpha * g, state.k + 1,
-                      state.bits_per_node + d * 32.0)
+        k_g, k_p = jax.random.split(key)
+        mask = participation_mask(k_p, n_workers, participation, sampling)
+        g_all = jax.vmap(
+            lambda i: local_grad(state.w, i, jax.random.fold_in(k_g, i)))(
+                jnp.arange(n_workers))
+        g = masked_mean(g_all, mask)
+        bits = state.bits_per_node + mask.astype(
+            state.bits_per_node.dtype) * (d * 32.0)
+        new = GDState(state.w - alpha * g, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g),
+                     "n_active": jnp.sum(mask),
                      "bits_per_node": new.bits_per_node}
 
     return step
 
 
-def init_gd(w0):
+def init_gd(w0, n_workers):
     return GDState(w0.astype(jnp.float32), jnp.zeros((), jnp.int32),
-                   jnp.zeros(()))
+                   jnp.zeros((n_workers,), bits_dtype()))

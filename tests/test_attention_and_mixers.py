@@ -102,6 +102,7 @@ def test_ssd_scan_matches_sequential(rng, chunk):
                                atol=2e-3)
 
 
+@pytest.mark.slow
 def test_ssd_scan_carried_state(rng):
     """Splitting a sequence across two calls == one call (serving resume)."""
     B, S, H, P, N = 1, 16, 2, 4, 3
@@ -122,6 +123,7 @@ def test_ssd_scan_carried_state(rng):
 
 # --- RG-LRU ----------------------------------------------------------------
 
+@pytest.mark.slow
 def test_rglru_scan_matches_stepwise(rng):
     from repro.configs import get_config
     cfg = get_config("recurrentgemma-9b", smoke=True)

@@ -80,6 +80,7 @@ def test_ssm_has_no_ffn():
     assert all(f == FFN_NONE for _, f in cfg.layer_plan)
 
 
+@pytest.mark.slow
 def test_param_budget_matches_names():
     """The config system reproduces the advertised parameter counts."""
     import numpy as np

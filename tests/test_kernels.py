@@ -60,6 +60,7 @@ def test_dither_unbiased_through_kernel(rng):
     (1, 2, 2, 384, 64, 0, 0.0),      # non-pow2 block count
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.slow
 def test_flash_attention_matches_ref(rng, B, H, KV, S, D, window, cap, dtype):
     q = jnp.asarray(rng.normal(size=(B, H, S, D)), dtype)
     k = jnp.asarray(rng.normal(size=(B, KV, S, D)), dtype)

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # full-model smoke: minutes, see quick_check.sh
+
 from repro.configs import get_config, list_archs
 from repro.models import (CPU_CTX, decode_step, forward, head_logits,
                           init_cache, init_params, prefill)

@@ -30,6 +30,7 @@ def test_spec_divisibility_fallback():
     assert spec == P(None, "data")
 
 
+@pytest.mark.slow
 def test_param_specs_cover_all_leaves():
     for arch in ("deepseek-v3-671b", "mamba2-1.3b", "recurrentgemma-9b"):
         cfg = get_config(arch)
@@ -46,6 +47,7 @@ def test_param_specs_cover_all_leaves():
                 assert any(s is not None for s in spec), (path, leaf.shape)
 
 
+@pytest.mark.slow
 def test_chunked_loss_matches_direct(rng):
     cfg = get_config("tinyllama-1.1b", smoke=True)
     params = init_params(cfg, jax.random.key(0), jnp.float32)
@@ -61,6 +63,7 @@ def test_chunked_loss_matches_direct(rng):
         assert abs(chunked - direct) < 1e-4
 
 
+@pytest.mark.slow
 def test_loss_mask(rng):
     cfg = get_config("tinyllama-1.1b", smoke=True)
     params = init_params(cfg, jax.random.key(0), jnp.float32)

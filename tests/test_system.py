@@ -8,6 +8,7 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+import pytest
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
@@ -22,10 +23,12 @@ def _run_sub(script: str, devices: int = 8) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 def test_moe_sorted_matches_ref_on_mesh():
     """Expert-parallel sorted/a2a MoE == dropless reference (big capacity)."""
     _run_sub("""
 import jax, jax.numpy as jnp, numpy as np, dataclasses, functools
+from repro.compat import shard_map
 from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh
 from repro.models import moe as moe_mod
@@ -47,7 +50,7 @@ fn = functools.partial(moe_mod.moe_sorted, cfg=cfg, axis_name="model",
 wspec = {"router": P(), "w_gate": P("model", "data", None),
          "w_up": P("model", "data", None), "w_down": P("model", None, "data")}
 mp = {k: params[k] for k in ("router", "w_gate", "w_up", "w_down")}
-out, aux = jax.jit(jax.shard_map(
+out, aux = jax.jit(shard_map(
     fn, mesh=mesh, in_specs=(wspec, P(("data", "model"), None)),
     out_specs=(P(("data", "model"), None), P()), check_vma=False))(mp, x)
 err = float(jnp.max(jnp.abs(out - ref)))
@@ -59,10 +62,12 @@ print("MOE PARITY OK", err)
 """)
 
 
+@pytest.mark.slow
 def test_moe_fshard_matches_ref_on_mesh():
     """Decode-layout (resident weights, partial-F) MoE == dropless ref."""
     _run_sub("""
 import jax, jax.numpy as jnp, numpy as np, dataclasses, functools
+from repro.compat import shard_map
 from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh
 from repro.models import moe as moe_mod
@@ -83,7 +88,7 @@ fn = functools.partial(moe_mod.moe_fshard, cfg=cfg, model_axis="model",
 fspec = {"router": P(), "w_gate": P("model", None, "data"),
          "w_up": P("model", None, "data"), "w_down": P("model", "data", None)}
 mp = {k: params[k] for k in ("router", "w_gate", "w_up", "w_down")}
-out, aux = jax.jit(jax.shard_map(
+out, aux = jax.jit(shard_map(
     fn, mesh=mesh, in_specs=(fspec, P("data", None)),
     out_specs=(P("data", None), P()), check_vma=False))(mp, x)
 err = float(jnp.max(jnp.abs(out - ref)))
@@ -92,6 +97,7 @@ print("MOE FSHARD PARITY OK", err)
 """)
 
 
+@pytest.mark.slow
 def test_dl_flecs_trains_on_mesh():
     """FLECS-CGD DL trainer: loss decreases with compression on."""
     _run_sub("""
@@ -104,7 +110,11 @@ from repro.models.model import init_params
 from repro.core.dl_flecs import FlecsDLConfig, make_flecs_train_step
 
 cfg = get_config("tinyllama-1.1b", smoke=True)
-mesh = make_debug_mesh((4, 2), ("data", "model"))
+# jax 0.4.x: XLA's partitioner crashes (IsManualSubgroup check) on the
+# partial-auto shard_map when the auto (model) axis is nontrivial; test the
+# model-sharded layout only on jax >= 0.5 and the data-only mesh otherwise.
+shape = (4, 2) if hasattr(jax, "shard_map") else (8, 1)
+mesh = make_debug_mesh(shape, ("data", "model"))
 ctx = ModelContext(mesh=mesh, data_axes=("data",), moe_impl="ref")
 params = init_params(cfg, jax.random.key(0), jnp.float32)
 pa = jax.eval_shape(lambda: params)
@@ -128,11 +138,13 @@ print("FLECS DL OK", losses[0], losses[-1])
 """)
 
 
+@pytest.mark.slow
 def test_moe_gather_quant_error_bounded():
     """int8-quantized expert gather (§Perf beyond-paper lever): output error
     vs the exact gather is bounded by the quantization step."""
     _run_sub("""
 import jax, jax.numpy as jnp, numpy as np, dataclasses, functools
+from repro.compat import shard_map
 from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh
 from repro.models import moe as moe_mod
@@ -153,7 +165,7 @@ for quant in (False, True):
     fn = functools.partial(moe_mod.moe_sorted, cfg=cfg, axis_name="model",
                            n_shards=2, gather_axis="data",
                            aux_axes=("data", "model"), gather_quant=quant)
-    outs[quant], _ = jax.jit(jax.shard_map(
+    outs[quant], _ = jax.jit(shard_map(
         fn, mesh=mesh, in_specs=(wspec, P(("data", "model"), None)),
         out_specs=(P(("data", "model"), None), P()), check_vma=False))(mp, x)
 err = float(jnp.max(jnp.abs(outs[True] - outs[False])))
@@ -163,6 +175,7 @@ print("GATHER QUANT OK", rel)
 """)
 
 
+@pytest.mark.slow
 def test_seq_sharded_decode_matches_unsharded():
     """long_500k path: flash-decode over a sequence-sharded cache equals
     single-device decode."""
@@ -192,6 +205,7 @@ print("SEQ-SHARD DECODE OK")
 """)
 
 
+@pytest.mark.slow
 def test_standard_trainer_runs_sharded():
     """Standard (non-FLECS) trainer with microbatching on a mesh."""
     _run_sub("""
@@ -217,8 +231,11 @@ pa, oa, ba = (jax.eval_shape(lambda t=t: t) for t in (params, opt_state, batch))
 ps = named_shardings(pa, mesh)
 os_ = named_shardings(oa, mesh)
 bs = named_shardings(ba, mesh, batch_specs(ba, mesh, ("data",)))
+# out_shardings pinned to the input shardings: without them the compiler
+# may emit differently-sharded outputs and the second call then fails the
+# strict in_shardings check on committed arrays (jax 0.4.x).
 step = jax.jit(make_train_step(cfg, ctx, opt, microbatches=2),
-               in_shardings=(ps, os_, bs))
+               in_shardings=(ps, os_, bs), out_shardings=(ps, os_, None))
 losses = []
 for _ in range(5):
     params, opt_state, m = step(params, opt_state, batch)
@@ -230,6 +247,7 @@ print("TRAINER OK", losses)
 
 def test_federated_logreg_end_to_end():
     """The paper's experiment end-to-end in-process (single device)."""
+    from repro.core.driver import run_experiment
     from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
     from repro.data.logreg import make_problem
 
@@ -237,13 +255,12 @@ def test_federated_logreg_end_to_end():
     lg, lh = prob.make_oracles()
     cfg = FlecsConfig(m=2, grad_compressor="dither64",
                       hess_compressor="dither64")
-    step = jax.jit(make_flecs_step(cfg, lg, lh))
-    st = init_state(jnp.zeros(prob.d), prob.n_workers)
-    key = jax.random.key(0)
-    f0 = float(prob.global_loss(st.w))
-    for _ in range(200):
-        key, sk = jax.random.split(key)
-        st, aux = step(st, sk)
+    step = make_flecs_step(cfg, lg, lh)
+    st0 = init_state(jnp.zeros(prob.d), prob.n_workers)
+    f0 = float(prob.global_loss(st0.w))
+    st, traces = run_experiment(step, st0, jax.random.key(0), 200,
+                                record=lambda s: prob.metrics(s.w))
     f1 = float(prob.global_loss(st.w))
     assert f1 < f0 - 0.01
-    assert float(st.bits_per_node) > 0
+    assert traces["F"].shape == (200,)
+    assert float(st.bits_per_node.min()) > 0
