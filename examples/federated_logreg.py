@@ -7,22 +7,30 @@ workers contribute to the server aggregate and pay communication bits.
 
     PYTHONPATH=src python examples/federated_logreg.py [--d 123] [--iters 200]
     PYTHONPATH=src python examples/federated_logreg.py --participation 0.5
+    PYTHONPATH=src python examples/federated_logreg.py --staleness 2 \
+        --delay-kind geometric --participation 0.5
 
 With --participation 0.5 the printed Mbits/node column is roughly halved
 for every method at the same iteration count — the partial-participation
-bits ledger in action.
+bits ledger in action.  With --staleness TAU > 0 the FLECS-CGD / DIANA / GD
+rows switch to the FedBuff-style async engine: updates arrive TAU rounds
+late (per --delay-kind), buffer on the server until --buffer-k have
+accumulated, and bits are charged at the arrival round — the extra
+stale/round column reports the mean age of applied updates.
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.driver import run_experiment
-from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
+from repro.core.driver import StalenessSchedule, run_experiment
+from repro.core.flecs import (FlecsConfig, init_async_state, init_state,
+                              make_flecs_async_step, make_flecs_step)
 from repro.data.logreg import make_problem
-from repro.optim.baselines import (init_diana, init_fednl, init_gd,
-                                   make_diana_step, make_fednl_step,
-                                   make_gd_step)
+from repro.optim.baselines import (init_diana, init_diana_async, init_fednl,
+                                   init_gd, init_gd_async, make_diana_step,
+                                   make_diana_async_step, make_fednl_step,
+                                   make_gd_step, make_gd_async_step)
 
 
 def run_method(name, step, state, prob, iters):
@@ -32,8 +40,14 @@ def run_method(name, step, state, prob, iters):
     g = float(jnp.sqrt(traces["grad_sq"][-1]))
     mbits = float(jnp.max(state.bits_per_node)) / 1e6
     active = float(jnp.mean(traces["n_active"]))
-    print(f"{name:12s} F={F:.6f} ||grad||={g:.2e} Mbits/node={mbits:7.3f} "
-          f"active/round={active:5.1f}")
+    line = (f"{name:12s} F={F:.6f} ||grad||={g:.2e} Mbits/node={mbits:7.3f} "
+            f"active/round={active:5.1f}")
+    if "staleness_mean" in traces:
+        arr = traces["n_arrived"]
+        stale = float(jnp.sum(traces["staleness_mean"] * arr)
+                      / jnp.maximum(jnp.sum(arr), 1.0))
+        line += f" stale/round={stale:4.2f}"
+    print(line)
 
 
 def main():
@@ -45,27 +59,52 @@ def main():
                     help="per-round client sampling probability (1.0 = all)")
     ap.add_argument("--sampling", choices=("bernoulli", "choice"),
                     default="choice")
+    ap.add_argument("--staleness", type=int, default=0, metavar="TAU",
+                    help="async mode: updates arrive TAU rounds late "
+                         "(0 = synchronous)")
+    ap.add_argument("--delay-kind", choices=("fixed", "uniform", "geometric"),
+                    default="fixed")
+    ap.add_argument("--buffer-k", type=int, default=0,
+                    help="FedBuff aggregation goal (0 = auto: n/4, min 1)")
     args = ap.parse_args()
 
     prob = make_problem(d=args.d, n_workers=args.workers, r=64, mu=1e-3)
     lg, lh = prob.make_oracles()
     p, samp = args.participation, args.sampling
-    # second-order steps need damping once client sampling adds variance
-    alpha = 1.0 if p >= 1.0 else 0.5
+    tau = args.staleness
+    sched = StalenessSchedule(args.delay_kind, tau=tau)
+    K = args.buffer_k or max(1, args.workers // 4)
+    # second-order steps need damping once client sampling / staleness add
+    # variance (stale preconditioned updates amplify subset noise)
+    alpha = 1.0 if (p >= 1.0 and tau == 0) else (0.5 if tau == 0 else 0.2)
 
     for name, gc in (("FLECS", "identity"), ("FLECS-CGD", "dither64")):
         cfg = FlecsConfig(m=1, alpha=alpha, grad_compressor=gc,
                           hess_compressor="dither64",
                           participation=p, sampling=samp)
-        run_method(name, make_flecs_step(cfg, lg, lh),
-                   init_state(jnp.zeros(prob.d), prob.n_workers), prob,
-                   args.iters)
+        if tau > 0:
+            run_method(name + "+async",
+                       make_flecs_async_step(cfg, lg, lh, sched, K),
+                       init_async_state(jnp.zeros(prob.d), prob.n_workers,
+                                        cfg.m, sched.max_delay),
+                       prob, args.iters)
+        else:
+            run_method(name, make_flecs_step(cfg, lg, lh),
+                       init_state(jnp.zeros(prob.d), prob.n_workers), prob,
+                       args.iters)
 
-    run_method("DIANA",
-               make_diana_step(1.0, 0.5, "dither64", lg,
-                               participation=p, sampling=samp),
-               init_diana(jnp.zeros(prob.d), prob.n_workers), prob,
-               args.iters)
+    if tau > 0:
+        run_method("DIANA+async",
+                   make_diana_async_step(1.0, 0.5, "dither64", lg, sched, K,
+                                         participation=p, sampling=samp),
+                   init_diana_async(jnp.zeros(prob.d), prob.n_workers,
+                                    sched.max_delay), prob, args.iters)
+    else:
+        run_method("DIANA",
+                   make_diana_step(1.0, 0.5, "dither64", lg,
+                                   participation=p, sampling=samp),
+                   init_diana(jnp.zeros(prob.d), prob.n_workers), prob,
+                   args.iters)
 
     def local_hessian(w, i):
         return jax.hessian(lambda ww: prob.local_loss(ww, i))(w)
@@ -75,10 +114,21 @@ def main():
                                participation=p, sampling=samp),
                init_fednl(jnp.zeros(prob.d), prob.n_workers), prob,
                min(args.iters, 80))
-    run_method("GD",
-               make_gd_step(2.0, lg, prob.n_workers,
-                            participation=p, sampling=samp),
-               init_gd(jnp.zeros(prob.d), prob.n_workers), prob, args.iters)
+    if tau > 0:
+        # stale uncompressed gradients need damping too: alpha halved vs
+        # the synchronous GD row's 2.0, so the printed async degradation
+        # mixes staleness AND the deliberate step-size cut
+        run_method("GD+async",
+                   make_gd_async_step(1.0, lg, prob.n_workers, sched, K,
+                                      participation=p, sampling=samp),
+                   init_gd_async(jnp.zeros(prob.d), prob.n_workers,
+                                 sched.max_delay), prob, args.iters)
+    else:
+        run_method("GD",
+                   make_gd_step(2.0, lg, prob.n_workers,
+                                participation=p, sampling=samp),
+                   init_gd(jnp.zeros(prob.d), prob.n_workers), prob,
+                   args.iters)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Scan-based federated experiment engine.
+"""Scan-based federated experiment engine (synchronous + async/buffered).
 
 Every experiment surface in this repo (tests, examples, benchmarks) drives
 federated optimization steps of the uniform shape
@@ -14,7 +14,11 @@ site.  This module replaces all of those loops with **one** compiled
   traces (loss, gradient norm, bits/node, …) through the scan ys.  Extra
   quantities (e.g. the global objective) are recorded inside the scan via
   the ``record`` callback, so the host never re-enters the device between
-  rounds.
+  rounds.  ``record_every=E`` thins the stacked traces *inside* the scan
+  (nested scan over E-round blocks), so a 100k-round run materializes
+  ``iters // E`` rows instead of ``iters`` on device; ``trace_dtype``
+  down-casts float trace entries (e.g. bf16 for long sweeps) while bit
+  counters stay in :func:`bits_dtype`.
 * :func:`run_sweep` — vmap a whole hyperparameter grid of independent runs
   (step sizes, dithering levels) over the scan, so a Figure-1-style
   comparison grid is a single device program.
@@ -24,23 +28,55 @@ site.  This module replaces all of those loops with **one** compiled
   sampled set neither contribute to the server aggregate nor pay
   communication bits that round.
 
-Example (FLECS-CGD with half the clients sampled each round)::
+Buffered / asynchronous aggregation (FedBuff-style staleness)
+-------------------------------------------------------------
+Real federations are asynchronous: a sampled worker's compressed gradient
+difference ``c_k^i`` (and Hessian delta) arrives ``tau`` rounds after it was
+computed.  The engine models this with two pieces, both carried *inside*
+the scan state:
 
-    from repro.core.driver import run_experiment
-    from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
+* :class:`StalenessSchedule` — per-worker integer delays sampled each round
+  (``fixed`` delay, ``uniform`` in [0, tau], or ``geometric`` stragglers
+  capped at tau).
+* :class:`MessageBuffer` — a bounded cyclic in-flight store with
+  ``tau_max + 1`` slots.  :func:`buffer_send` files a sampled worker's
+  message under its arrival round; :func:`buffer_receive` drains the
+  messages arriving at the current round.  A worker with a message still in
+  flight is *busy* (:func:`buffer_busy`) and is not handed new work — this
+  keeps DIANA/FLECS shift algebra exact (a message is always reconstructed
+  against the same shift ``h^i`` it was compressed against), and is how
+  FedBuff-style systems treat slow clients.
 
-    cfg = FlecsConfig(m=2, participation=0.5)
-    step = make_flecs_step(cfg, local_grad, local_hvp)
+Arrived updates accumulate in a FedBuff aggregation buffer; once ``K``
+updates have buffered, the server applies one aggregate step and resets the
+buffer.  Communication bits are charged at the *arrival* round.  With
+``tau = 0`` and ``K = n`` (full participation) — or ``K = 1`` under client
+sampling — the async engine provably collapses to the synchronous one
+(tested in tests/test_async_aggregation.py).
+
+Async quickstart (FLECS-CGD, fixed 2-round delay, half the clients)::
+
+    from repro.core.driver import StalenessSchedule, run_experiment
+    from repro.core.flecs import (FlecsConfig, init_async_state,
+                                  make_flecs_async_step)
+
+    cfg = FlecsConfig(m=2, alpha=0.5, participation=0.5, sampling="choice")
+    sched = StalenessSchedule(kind="fixed", tau=2)
+    step = make_flecs_async_step(cfg, local_grad, local_hvp, sched,
+                                 buffer_k=4)
+    state = init_async_state(w0, n_workers=8, m=cfg.m,
+                             max_delay=sched.max_delay)
     state, traces = run_experiment(
-        step, init_state(w0, n_workers), jax.random.key(0), iters=250,
+        step, state, jax.random.key(0), iters=600,
         record=lambda st: {"F": prob.global_loss(st.w)})
-    # traces["F"]: [250] objective trajectory
-    # traces["bits_per_node"]: [250, n] cumulative bits, 0-increment for
-    #                          workers skipped by the sampler that round.
+    # traces["bits_per_node"]: bits charged at the round each message
+    #                          *arrives*, not when it was computed.
+    # traces["staleness_mean"]: average age (rounds) of applied updates.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -60,12 +96,17 @@ def participation_mask(key, n: int, p: float = 1.0,
                        kind: str = "bernoulli") -> jnp.ndarray:
     """Per-round client-sampling mask, [n] float32 in {0, 1}.
 
-    p >= 1 returns all-ones (full participation, key unused).
+    p must be > 0; p >= 1 returns all-ones (full participation, key unused).
     kind="bernoulli": each worker participates independently w.p. p (the
         round may sample zero workers; aggregation guards handle that).
     kind="choice": exactly max(1, round(p*n)) workers, uniformly without
-        replacement (FedLab-style client sampling).
+        replacement (FedLab-style client sampling) — every round samples at
+        least one worker, even for arbitrarily small p.
+    Both kinds are pure functions of (key, n, p, kind) and trace cleanly
+    under jit/vmap/scan (the exact-k count is resolved at trace time).
     """
+    if p <= 0:
+        raise ValueError(f"participation p must be > 0, got {p}")
     if p >= 1.0:
         return jnp.ones((n,), jnp.float32)
     if kind == "bernoulli":
@@ -83,23 +124,214 @@ def masked_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     mask: [n] in {0,1}.  An all-zero mask yields zeros (no division by 0),
     which downstream direction computations map to a no-op round.
     """
-    shape = (-1,) + (1,) * (x.ndim - 1)
     denom = jnp.maximum(jnp.sum(mask), 1.0)
-    return jnp.sum(mask.reshape(shape) * x, axis=0) / denom
+    return masked_sum(x, mask) / denom
 
 
-def _scan_body(step: Callable, record: Optional[Callable]):
+def masked_sum(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Sum of x over the workers with mask == 1 — the numerator of
+    :func:`masked_mean`, op-for-op.  The async steps accumulate FedBuff
+    buffers with this so a tau=0 run matches the synchronous masked mean
+    bit-for-bit."""
+    shape = (-1,) + (1,) * (x.ndim - 1)
+    return jnp.sum(mask.reshape(shape) * x, axis=0)
+
+
+# fold_in salt for the async steps' per-round delay key.  Deriving the
+# delay key via fold_in (not by widening the step key's split) keeps each
+# method's synchronous key split untouched, which is what makes tau=0
+# trace-exact.  All async step makers share this constant.
+ASYNC_SALT = 0x5A17
+
+
+# ---------------------------------------------------------------------------
+# Staleness: per-worker delay sampling
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StalenessSchedule:
+    """Per-worker integer round delays, sampled fresh each round.
+
+    kind="fixed":     every message arrives exactly ``tau`` rounds after it
+                      was computed (tau=0 == synchronous).
+    kind="uniform":   delay ~ Uniform{0, …, tau}.
+    kind="geometric": delay ~ min(Geometric straggler, tau): each round in
+                      flight continues with probability ``q`` (so the mean
+                      uncapped delay is q/(1-q) rounds).
+
+    ``tau`` bounds the delay in all three models, which bounds the
+    :class:`MessageBuffer` to ``tau + 1`` slots.
+    """
+    kind: str = "fixed"
+    tau: int = 0
+    q: float = 0.5     # geometric only: per-round straggle probability
+
+    def __post_init__(self):
+        if self.kind not in ("fixed", "uniform", "geometric"):
+            raise ValueError(f"unknown staleness kind: {self.kind!r}")
+        if self.tau < 0:
+            raise ValueError(f"tau must be >= 0, got {self.tau}")
+        if self.kind == "geometric" and not 0.0 < self.q < 1.0:
+            raise ValueError(f"geometric q must be in (0, 1), got {self.q}")
+
+    @property
+    def max_delay(self) -> int:
+        return self.tau
+
+    def sample(self, key, n: int) -> jnp.ndarray:
+        """[n] int32 delays in [0, tau]; trace-safe under jit/vmap/scan."""
+        if self.kind == "fixed" or self.tau == 0:
+            return jnp.full((n,), self.tau, jnp.int32)
+        if self.kind == "uniform":
+            return jax.random.randint(key, (n,), 0, self.tau + 1,
+                                      dtype=jnp.int32)
+        # geometric: P(delay >= t) = q^t  <=>  floor(log(u) / log(q))
+        u = jax.random.uniform(key, (n,), minval=jnp.finfo(jnp.float32).tiny)
+        g = jnp.floor(jnp.log(u) / jnp.log(jnp.float32(self.q)))
+        return jnp.minimum(g.astype(jnp.int32), self.tau)
+
+
+# ---------------------------------------------------------------------------
+# Bounded in-flight message buffer (carried through the scan state)
+# ---------------------------------------------------------------------------
+
+class MessageBuffer(NamedTuple):
+    """Cyclic in-flight store: slot ``r % S`` holds messages arriving at
+    round r (S = max_delay + 1 slots, so an arrival round is never
+    overwritten before it is drained).
+
+    slots:    pytree of [S, n, ...] arrays (one leaf per message field).
+              Cells of workers with ``occupied == 0`` hold stale garbage —
+              every consumer must gate on the arrival mask.
+    occupied: [S, n] float32 in {0, 1}.
+    """
+    slots: Any
+    occupied: jnp.ndarray
+
+
+def init_buffer(proto, max_delay: int) -> MessageBuffer:
+    """Empty buffer for per-worker message prototype ``proto`` (pytree of
+    [n, ...] arrays) with capacity for delays in [0, max_delay]."""
+    S = int(max_delay) + 1
+    n = jax.tree.leaves(proto)[0].shape[0]
+    slots = jax.tree.map(lambda x: jnp.zeros((S,) + x.shape, x.dtype), proto)
+    return MessageBuffer(slots, jnp.zeros((S, n), jnp.float32))
+
+
+def buffer_busy(buf: MessageBuffer) -> jnp.ndarray:
+    """[n] {0,1}: worker has a message in flight (not yet drained).  Busy
+    workers must not be handed new work — the shift-consistency lock."""
+    return jnp.max(buf.occupied, axis=0)
+
+
+def buffer_send(buf: MessageBuffer, msgs, mask: jnp.ndarray,
+                delays: jnp.ndarray, k) -> MessageBuffer:
+    """File ``msgs`` (pytree of [n, ...]) computed at round ``k`` by the
+    workers with ``mask == 1`` under arrival slot ``(k + delay_i) % S``."""
+    S = buf.occupied.shape[0]
+    slot = (jnp.asarray(k, jnp.int32) + delays) % S              # [n]
+    hit = ((jnp.arange(S)[:, None] == slot[None, :])
+           .astype(jnp.float32) * mask[None, :])                 # [S, n]
+
+    def write(cur, msg):
+        h = hit.reshape(hit.shape + (1,) * (msg.ndim - 1))
+        return cur * (1.0 - h) + h * msg[None].astype(cur.dtype)
+
+    return MessageBuffer(jax.tree.map(write, buf.slots, msgs),
+                         buf.occupied * (1.0 - hit) + hit)
+
+
+def buffer_receive(buf: MessageBuffer, k):
+    """Drain round ``k``'s arrivals: returns (buf', msgs, arrived) where
+    msgs is a pytree of [n, ...] and arrived is the [n] {0,1} arrival mask.
+    Message cells with ``arrived == 0`` are stale — gate every use."""
+    S = buf.occupied.shape[0]
+    s = jnp.asarray(k, jnp.int32) % S
+    msgs = jax.tree.map(lambda a: a[s], buf.slots)
+    arrived = buf.occupied[s]
+    keep = (jnp.arange(S) != s).astype(jnp.float32)[:, None]     # [S, 1]
+    return MessageBuffer(buf.slots, buf.occupied * keep), msgs, arrived
+
+
+def fedbuff_accumulate(acc, acc_n, contributions, arrived, buffer_k: int):
+    """One round of FedBuff server bookkeeping, shared by every async step.
+
+    acc:           pytree of running sums since the last flush.
+    contributions: matching pytree of per-worker [n, ...] values; rows with
+                   ``arrived == 0`` are ignored.
+    Returns (acc', acc_n', means, flush, reset): the updated sums and
+    count, the buffered mean pytree (sum / max(count, 1) — the synchronous
+    ``masked_mean`` algebra, so tau=0 stays trace-exact), the scalar bool
+    "count reached buffer_k", and ``reset(tree)``, which zeroes a pytree on
+    flush (apply it to acc'/acc_n' when building the next state).
+    """
+    acc = jax.tree.map(lambda a, x: a + masked_sum(x, arrived), acc,
+                       contributions)
+    acc_n = acc_n + jnp.sum(arrived)
+    flush = acc_n >= buffer_k
+    denom = jnp.maximum(acc_n, 1.0)
+    means = jax.tree.map(lambda a: a / denom, acc)
+
+    def reset(tree):
+        return jax.tree.map(
+            lambda a: jnp.where(flush, jnp.zeros_like(a), a), tree)
+
+    return acc, acc_n, means, flush, reset
+
+
+def applied_staleness(k, msg_t, arrived):
+    """Mean age (rounds) of this round's applied updates: k - compute-round
+    stamp, averaged over the arrival mask (0 when nothing arrived)."""
+    return (jnp.sum(arrived * (jnp.float32(k) - msg_t))
+            / jnp.maximum(jnp.sum(arrived), 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Scan plumbing
+# ---------------------------------------------------------------------------
+
+# Trace keys never down-cast by ``trace_dtype`` (bit ledgers must stay
+# exact in bits_dtype() — f32/bf16 lose integer counts).
+TRACE_KEEP_DTYPE: Sequence[str] = ("bits_per_node",)
+
+
+def _cast_traces(aux, trace_dtype, keep: Sequence[str]):
+    if trace_dtype is None:
+        return aux
+
+    def cast(v):
+        return jax.tree.map(
+            lambda a: a.astype(trace_dtype)
+            if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating) else a, v)
+
+    if isinstance(aux, dict):
+        return {k: (v if k in keep else cast(v)) for k, v in aux.items()}
+    return cast(aux)
+
+
+def _scan_body(step: Callable, record: Optional[Callable],
+               trace_dtype=None, keep: Sequence[str] = TRACE_KEEP_DTYPE):
     """Shared scan body: one round + optional in-scan trace recording."""
     def body(st, k):
         st, aux = step(st, k)
         if record is not None:
             aux = {**aux, **record(st)}
-        return st, aux
+        return st, _cast_traces(aux, trace_dtype, keep)
     return body
 
 
+def _thinned(body: Callable, every: int):
+    """Nested-scan wrapper: run ``every`` rounds per outer step, emit only
+    the last round's aux — traces shrink by ``every`` on device."""
+    def block(st, ks):
+        st, aux = jax.lax.scan(body, st, ks)
+        return st, jax.tree.map(lambda a: a[-1], aux)
+    return block
+
+
 def run_experiment(step: Callable, state, key, iters: int,
-                   record: Optional[Callable] = None):
+                   record: Optional[Callable] = None,
+                   record_every: int = 1, trace_dtype=None):
     """Run ``step`` for ``iters`` rounds in one compiled lax.scan program.
 
     step:   (state, key) -> (state, aux) — aux is a pytree of per-round
@@ -107,16 +339,33 @@ def run_experiment(step: Callable, state, key, iters: int,
     record: optional (state) -> dict of extra trace entries evaluated
             *inside* the scan after each round (e.g. global loss), merged
             into aux.  Keys shadow aux keys on collision.
+    record_every: thin traces inside the scan — only every E-th round's aux
+            is materialized (rows E-1, 2E-1, …), so traces have length
+            ``iters // E`` (iters must divide evenly).  The final row is
+            always the final state's aux.  Use for 100k-round async runs
+            whose dense [iters, ...] traces would not fit on device.
+    trace_dtype: optional down-cast dtype (e.g. ``jnp.bfloat16``) for float
+            trace entries; keys in :data:`TRACE_KEEP_DTYPE` (the bit
+            ledgers) always stay in their accumulator dtype.
     Returns (final_state, traces).
     """
     keys = jax.random.split(key, iters)
-    body = _scan_body(step, record)
-    run = jax.jit(lambda st, ks: jax.lax.scan(body, st, ks))
-    return run(state, keys)
+    body = _scan_body(step, record, trace_dtype)
+    if record_every == 1:
+        run = jax.jit(lambda st, ks: jax.lax.scan(body, st, ks))
+        return run(state, keys)
+    if record_every < 1 or iters % record_every:
+        raise ValueError(
+            f"record_every={record_every} must divide iters={iters}")
+    kb = keys.reshape((iters // record_every, record_every) + keys.shape[1:])
+    block = _thinned(body, record_every)
+    run = jax.jit(lambda st, ks: jax.lax.scan(block, st, ks))
+    return run(state, kb)
 
 
 def run_sweep(sweep_step: Callable, hparams, state, key, iters: int,
-              record: Optional[Callable] = None):
+              record: Optional[Callable] = None,
+              record_every: int = 1, trace_dtype=None):
     """Vmapped hyperparameter sweep: a grid of runs as ONE device program.
 
     sweep_step: (hp, state, key) -> (state, aux), e.g. from
@@ -126,16 +375,28 @@ def run_sweep(sweep_step: Callable, hparams, state, key, iters: int,
     hparams:    pytree whose leaves share a leading grid axis [G, ...]
                 (e.g. a ``FlecsHParams`` of [G] arrays).
     state:      a single initial state, shared by every grid point.
+    record_every / trace_dtype: as in :func:`run_experiment`.
     Returns (final_states, traces) with leading grid axis [G, ...] /
-    [G, iters, ...].  Each grid point gets an independent key stream.
+    [G, iters // record_every, ...].  Each grid point gets an independent
+    key stream: point g steps with ``split(split(key, G)[g], iters)`` — the
+    exact stream a standalone ``run_experiment(step_g, state,
+    split(key, G)[g], iters)`` would use, so a sweep row reproduces the
+    corresponding independent run bit-for-bit.
     """
     G = jax.tree.leaves(hparams)[0].shape[0]
     keys = jax.vmap(lambda k: jax.random.split(k, iters))(
         jax.random.split(key, G))
+    if record_every != 1 and (record_every < 1 or iters % record_every):
+        raise ValueError(
+            f"record_every={record_every} must divide iters={iters}")
 
     def one(hp, ks):
-        body = _scan_body(lambda st, k: sweep_step(hp, st, k), record)
-        return jax.lax.scan(body, state, ks)
+        body = _scan_body(lambda st, k: sweep_step(hp, st, k), record,
+                          trace_dtype)
+        if record_every == 1:
+            return jax.lax.scan(body, state, ks)
+        kb = ks.reshape((iters // record_every, record_every) + ks.shape[1:])
+        return jax.lax.scan(_thinned(body, record_every), state, kb)
 
     return jax.jit(jax.vmap(one))(hparams, keys)
 

@@ -21,6 +21,19 @@ Partial participation (beyond-paper axis, FedNL/FedLab-style): set
 server aggregates (g̃, Ỹ, M̄, B̄), update their shift h^i / approximation
 B^i, and pay communication bits; skipped workers are charged zero bits.
 
+Asynchronous buffered aggregation (beyond-paper axis, FedBuff-style): see
+``make_flecs_async_step`` — a sampled worker's message (c_k^i, Ỹ_k^i,
+M_k^i) arrives ``tau`` rounds after it was computed (delays drawn from a
+``driver.StalenessSchedule``), buffers FedBuff-style on the server, and is
+applied once ``buffer_k`` updates have accumulated.  The worker's shift
+h^i and approximation B^i are updated — and its bits charged — at the
+*arrival* round; a worker with a message in flight is busy and is not
+sampled again, which keeps the shift algebra exact (every c^i is
+reconstructed against the same h^i it was compressed against).  With
+``tau=0`` (and ``buffer_k=n`` at full participation, or ``buffer_k=1``
+under sampling) the async step reproduces the synchronous one trace-for-
+trace (tests/test_async_aggregation.py).
+
 Communication accounting (per *participating* worker per iteration, bits;
 ``FlecsState.bits_per_node`` is a per-worker [n] vector):
   c_k^i : d values   x c bits        (gradient difference, compressed)
@@ -45,7 +58,11 @@ from repro.core.compressors import (Compressor, dither, dither_bits,
 from repro.core.directions import (fedsonia_direction,
                                    truncated_inverse_direction,
                                    truncated_inverse_direction_floored)
-from repro.core.driver import bits_dtype, masked_mean, participation_mask
+from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
+                               applied_staleness, bits_dtype, buffer_busy,
+                               buffer_receive, buffer_send,
+                               fedbuff_accumulate, init_buffer, masked_mean,
+                               participation_mask)
 from repro.core.sketch import sketch
 from repro.core.updates import direct_update, truncated_lsr1_update
 
@@ -123,6 +140,46 @@ def bits_per_round(cfg: FlecsConfig, d: int) -> float:
             + cfg.m * cfg.m * 32.0)
 
 
+def _worker_messages(local_grad: Callable, local_hvp: Callable,
+                     q_compress: Callable, hess_C: Compressor,
+                     w, h, B, S, k_g, k_h, k_q, k_c):
+    """Worker compute phase of Algorithm 1, vmapped over the federation.
+
+    Returns (c_all [n,d], M_all [n,m,m], C_all [n,d,m], BS_all [n,d,m]) at
+    the current iterate ``w`` against the current shifts/approximations —
+    shared verbatim by the synchronous round and the async (buffered) step,
+    so the two consume identical key streams and are trace-equivalent at
+    zero delay.
+    """
+    n = h.shape[0]
+
+    def worker(i, hk, Bk, kq, kc):
+        g = local_grad(w, i, jax.random.fold_in(k_g, i))
+        Y = local_hvp(w, S, i, jax.random.fold_in(k_h, i))
+        M = S.T @ Y                                     # m x m (exact)
+        c = q_compress(kq, g - hk)                      # compressed grad diff
+        BS = Bk @ S
+        Cm = hess_C.compress(kc, Y - BS)                # compressed hess diff
+        return c, M, Cm, BS
+
+    ks_q = jax.random.split(k_q, n)
+    ks_c = jax.random.split(k_c, n)
+    return jax.vmap(worker)(jnp.arange(n), h, B, ks_q, ks_c)
+
+
+def _direction(cfg: FlecsConfig, g_tilde, Y_tilde, M_bar, B_bar):
+    """Search-direction dispatch (Alg 4 variants / Alg 5) from the server
+    aggregates — shared by the synchronous round and the async flush."""
+    if cfg.direction == "truncated_inverse":
+        if cfg.tinv_floor > 0:
+            return truncated_inverse_direction_floored(
+                B_bar, g_tilde, cfg.omega, cfg.Omega, cfg.tinv_floor)
+        return truncated_inverse_direction(B_bar, g_tilde, cfg.omega,
+                                           cfg.Omega)
+    return fedsonia_direction(Y_tilde, M_bar, g_tilde, cfg.omega,
+                              cfg.Omega, cfg.rho_val)
+
+
 def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
                  q_compress: Callable, q_bits, hess_C: Compressor,
                  state: FlecsState, key, alpha, gamma):
@@ -139,19 +196,9 @@ def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
     k_g, k_h, k_q, k_c, k_p = jax.random.split(key, 5)
     mask = participation_mask(k_p, n, cfg.participation, cfg.sampling)  # [n]
 
-    def worker(i, hk, Bk, kq, kc):
-        g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
-        Y = local_hvp(state.w, S, i, jax.random.fold_in(k_h, i))
-        M = S.T @ Y                                     # m x m (exact)
-        c = q_compress(kq, g - hk)                      # compressed grad diff
-        BS = Bk @ S
-        Cm = hess_C.compress(kc, Y - BS)                # compressed hess diff
-        return c, M, Cm, BS
-
-    ks_q = jax.random.split(k_q, n)
-    ks_c = jax.random.split(k_c, n)
-    c_all, M_all, C_all, BS_all = jax.vmap(worker)(
-        jnp.arange(n), state.h, state.B, ks_q, ks_c)
+    c_all, M_all, C_all, BS_all = _worker_messages(
+        local_grad, local_hvp, q_compress, hess_C,
+        state.w, state.h, state.B, S, k_g, k_h, k_q, k_c)
 
     # --- server -----------------------------------------------------------
     g_tilde_i = c_all + state.h                          # [n, d]
@@ -174,17 +221,7 @@ def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
     M_bar = masked_mean(M_all, mask)
     B_bar = masked_mean(B_new, mask)
 
-    if cfg.direction == "truncated_inverse":
-        if cfg.tinv_floor > 0:
-            p = truncated_inverse_direction_floored(
-                B_bar, g_tilde, cfg.omega, cfg.Omega, cfg.tinv_floor)
-        else:
-            p = truncated_inverse_direction(B_bar, g_tilde, cfg.omega,
-                                            cfg.Omega)
-    else:
-        p = fedsonia_direction(Y_tilde, M_bar, g_tilde, cfg.omega,
-                               cfg.Omega, cfg.rho_val)
-
+    p = _direction(cfg, g_tilde, Y_tilde, M_bar, B_bar)
     w_new = state.w + alpha * p
     h_new = state.h + gamma * mask[:, None] * c_all
 
@@ -212,6 +249,159 @@ def make_flecs_step(cfg: FlecsConfig,
         return _flecs_round(cfg, local_grad, local_hvp, Q.compress,
                             Q.bits_per_value, C, state, key,
                             cfg.alpha, cfg.gamma)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous buffered aggregation (FedBuff-style staleness)
+# ---------------------------------------------------------------------------
+
+class FlecsAsyncState(NamedTuple):
+    """Synchronous server state + the in-flight/aggregation buffers.
+
+    buf holds per-worker messages {c [n,d], Y [n,d,m], M [n,m,m], t [n]}
+    keyed by arrival round (t = compute round, for staleness accounting and
+    compute-time sketch regeneration).  acc_* are the FedBuff running sums
+    since the last flush; acc_n counts buffered updates.
+    """
+    w: jnp.ndarray
+    h: jnp.ndarray
+    B: jnp.ndarray
+    k: jnp.ndarray
+    bits_per_node: jnp.ndarray
+    buf: MessageBuffer
+    acc_g: jnp.ndarray    # [d]    sum of arrived g̃^i = c^i + h^i
+    acc_Y: jnp.ndarray    # [d,m]  sum of arrived Ỹ^i
+    acc_M: jnp.ndarray    # [m,m]  sum of arrived M^i
+    acc_B: jnp.ndarray    # [d,d]  sum of arrived workers' updated B^i
+    acc_n: jnp.ndarray    # scalar buffered-update count
+
+
+def init_async_state(w0: jnp.ndarray, n_workers: int, m: int,
+                     max_delay: int) -> FlecsAsyncState:
+    base = init_state(w0, n_workers)
+    d = w0.shape[0]
+    proto = {"c": jnp.zeros((n_workers, d), jnp.float32),
+             "Y": jnp.zeros((n_workers, d, m), jnp.float32),
+             "M": jnp.zeros((n_workers, m, m), jnp.float32),
+             "t": jnp.zeros((n_workers,), jnp.float32)}
+    return FlecsAsyncState(
+        base.w, base.h, base.B, base.k, base.bits_per_node,
+        init_buffer(proto, max_delay),
+        jnp.zeros((d,), jnp.float32), jnp.zeros((d, m), jnp.float32),
+        jnp.zeros((m, m), jnp.float32), jnp.zeros((d, d), jnp.float32),
+        jnp.zeros((), jnp.float32))
+
+
+def make_flecs_async_step(cfg: FlecsConfig, local_grad: Callable,
+                          local_hvp: Callable,
+                          schedule: StalenessSchedule, buffer_k: int):
+    """Build a scan-able async step(state, key) -> (state, aux).
+
+    Per round: (1) sample clients, excluding busy workers (message still in
+    flight); (2) sampled workers compute (c, Ỹ, M) at the *current* iterate
+    exactly as the synchronous round; (3) messages are filed under arrival
+    round ``k + delay`` (delays from ``schedule``); (4) this round's
+    arrivals update their shift h^i / approximation B^i, are charged bits,
+    and join the FedBuff buffer; (5) once ``buffer_k`` updates have
+    buffered, the server takes one aggregate step from the buffered means
+    and resets the buffer.
+
+    Stale-curvature note: FedSONIA consumes Ỹ/M̄ means over messages from
+    *different* compute rounds (different sketches S_t) — exactly the
+    staleness a real async federation sees.  The L-SR1 path regenerates
+    each message's compute-time sketch from its buffered round stamp.
+    """
+    Q = get_compressor(cfg.grad_compressor)
+    C = get_compressor(cfg.hess_compressor)
+
+    def step(state: FlecsAsyncState, key):
+        n, d = state.h.shape
+        m = cfg.m
+        S = sketch(cfg.sketch_kind, d, m, state.k)
+        k_g, k_h, k_q, k_c, k_p = jax.random.split(key, 5)   # == sync split
+        k_tau = jax.random.fold_in(key, ASYNC_SALT)
+
+        mask = participation_mask(k_p, n, cfg.participation, cfg.sampling)
+        send_mask = mask * (1.0 - buffer_busy(state.buf))
+
+        # cond-gate the worker compute: in a fixed-delay cycle most rounds
+        # send nothing (everyone is busy), so skip the n gradients/HVPs
+        # entirely on those rounds — the results would be all-masked anyway
+        def compute(_):
+            return _worker_messages(
+                local_grad, local_hvp, Q.compress, C,
+                state.w, state.h, state.B, S, k_g, k_h, k_q, k_c)
+
+        c_all, M_all, C_all, BS_all = jax.lax.cond(
+            jnp.any(send_mask > 0), compute,
+            lambda _: (jnp.zeros((n, d), jnp.float32),
+                       jnp.zeros((n, m, m), jnp.float32),
+                       jnp.zeros((n, d, m), jnp.float32),
+                       jnp.zeros((n, d, m), jnp.float32)), None)
+        msgs = {"c": c_all, "Y": C_all + BS_all, "M": M_all,
+                "t": jnp.full((n,), state.k, jnp.float32)}
+
+        delays = schedule.sample(k_tau, n)
+        buf = buffer_send(state.buf, msgs, send_mask, delays, state.k)
+        buf, msg, arrived = buffer_receive(buf, state.k)
+
+        # --- arrivals: per-worker server state, bits at the arrival round
+        def update_B(_):
+            if cfg.hessian_update == "direct":
+                upd = jax.vmap(
+                    lambda B, Y, M: direct_update(B, Y, M, cfg.beta))(
+                        state.B, msg["Y"], msg["M"])
+            else:
+                upd = jax.vmap(
+                    lambda B, Y, M, t: truncated_lsr1_update(
+                        B, Y, M, sketch(cfg.sketch_kind, d, m,
+                                        t.astype(jnp.int32)), cfg.omega)[0])(
+                            state.B, msg["Y"], msg["M"], msg["t"])
+            return jnp.where(arrived[:, None, None] > 0, upd, state.B)
+
+        B_new = jax.lax.cond(jnp.any(arrived > 0), update_B,
+                             lambda _: state.B, None)
+        h_new = state.h + cfg.gamma * arrived[:, None] * msg["c"]
+
+        round_bits = (d * Q.bits_per_value + d * m * C.bits_per_value
+                      + m * m * 32.0)
+        bits_new = (state.bits_per_node
+                    + arrived.astype(state.bits_per_node.dtype) * round_bits)
+
+        # --- FedBuff buffer + flush once buffer_k updates have accumulated
+        acc, acc_n, means, flush, reset = fedbuff_accumulate(
+            {"g": state.acc_g, "Y": state.acc_Y, "M": state.acc_M,
+             "B": state.acc_B}, state.acc_n,
+            {"g": msg["c"] + state.h, "Y": msg["Y"], "M": msg["M"],
+             "B": B_new}, arrived, buffer_k)
+
+        # lax.cond so the O(d^3) direction computation runs only on flush
+        # rounds (a tau-round buffered run flushes every ~tau+1 rounds)
+        def flush_step(_):
+            p = _direction(cfg, means["g"], means["Y"], means["M"],
+                           means["B"])
+            return state.w + cfg.alpha * p, jnp.linalg.norm(p)
+
+        w_new, dir_norm = jax.lax.cond(
+            flush, flush_step,
+            lambda _: (state.w, jnp.zeros((), state.w.dtype)), None)
+
+        new_state = FlecsAsyncState(
+            w_new, h_new, B_new, state.k + 1, bits_new, buf,
+            reset(acc["g"]), reset(acc["Y"]), reset(acc["M"]),
+            reset(acc["B"]), reset(acc_n))
+        aux = {"g_tilde_norm": jnp.linalg.norm(means["g"]),
+               "dir_norm": dir_norm,
+               "n_active": jnp.sum(send_mask),
+               "n_arrived": jnp.sum(arrived),
+               "buffered": new_state.acc_n,
+               "flushed": flush.astype(jnp.float32),
+               "staleness_mean": applied_staleness(state.k, msg["t"],
+                                                   arrived),
+               "bits_per_node": new_state.bits_per_node}
+        return new_state, aux
 
     return step
 

@@ -16,6 +16,16 @@ kwargs (see ``driver.participation_mask``).  Only sampled workers enter the
 server aggregate, update their local server-side state (DIANA shift h^i,
 FedNL Hessian H^i), and pay bits; skipped workers are charged zero bits
 that round.
+
+Asynchronous buffered aggregation: ``make_diana_async_step`` and
+``make_gd_async_step`` give the first-order baselines the same
+FedBuff-style staleness axis as ``flecs.make_flecs_async_step`` — per-round
+delays from a ``driver.StalenessSchedule``, a bounded in-flight
+``MessageBuffer``, busy workers excluded from sampling, bits charged at the
+*arrival* round, and an aggregate step applied once ``buffer_k`` updates
+have buffered.  At ``tau=0`` (with ``buffer_k=1``, or ``buffer_k=n`` under
+full participation) they collapse to the synchronous steps trace-for-trace,
+so delay ablations compare methods on one engine.
 """
 from __future__ import annotations
 
@@ -26,7 +36,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import get_compressor
-from repro.core.driver import bits_dtype, masked_mean, participation_mask
+from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
+                               applied_staleness, bits_dtype, buffer_busy,
+                               buffer_receive, buffer_send,
+                               fedbuff_accumulate, init_buffer, masked_mean,
+                               participation_mask)
 
 
 class DianaState(NamedTuple):
@@ -70,6 +84,82 @@ def init_diana(w0, n_workers):
                       jnp.zeros((n_workers, w0.shape[0]), jnp.float32),
                       jnp.zeros((), jnp.int32),
                       jnp.zeros((n_workers,), bits_dtype()))
+
+
+class DianaAsyncState(NamedTuple):
+    w: jnp.ndarray
+    h: jnp.ndarray               # [n, d]
+    k: jnp.ndarray
+    bits_per_node: jnp.ndarray   # [n]
+    buf: MessageBuffer           # in-flight {c [n,d], t [n]}
+    acc_g: jnp.ndarray           # [d] FedBuff sum of arrived c^i + h^i
+    acc_n: jnp.ndarray           # buffered-update count
+
+
+def init_diana_async(w0, n_workers, max_delay: int) -> DianaAsyncState:
+    base = init_diana(w0, n_workers)
+    d = w0.shape[0]
+    proto = {"c": jnp.zeros((n_workers, d), jnp.float32),
+             "t": jnp.zeros((n_workers,), jnp.float32)}
+    return DianaAsyncState(base.w, base.h, base.k, base.bits_per_node,
+                           init_buffer(proto, max_delay),
+                           jnp.zeros((d,), jnp.float32),
+                           jnp.zeros((), jnp.float32))
+
+
+def make_diana_async_step(alpha: float, gamma: float, compressor: str,
+                          local_grad: Callable,
+                          schedule: StalenessSchedule, buffer_k: int,
+                          participation: float = 1.0,
+                          sampling: str = "bernoulli"):
+    """DIANA with FedBuff-style buffered aggregation: compressed gradient
+    differences arrive ``schedule`` rounds late, bits are charged at the
+    arrival round, shifts h^i update on arrival (busy workers are not
+    re-sampled, so each c^i reconstructs against its compute-time shift),
+    and the server steps once ``buffer_k`` updates have buffered."""
+    Q = get_compressor(compressor)
+
+    def step(state: DianaAsyncState, key):
+        n, d = state.h.shape
+        k_g, k_q, k_p = jax.random.split(key, 3)            # == sync split
+        k_tau = jax.random.fold_in(key, ASYNC_SALT)
+        mask = participation_mask(k_p, n, participation, sampling)
+        send_mask = mask * (1.0 - buffer_busy(state.buf))
+
+        def worker(i, hk, kq):
+            g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
+            return Q.compress(kq, g - hk)
+
+        # skip the n gradient evaluations on rounds where everyone is busy
+        c = jax.lax.cond(
+            jnp.any(send_mask > 0),
+            lambda _: jax.vmap(worker)(jnp.arange(n), state.h,
+                                       jax.random.split(k_q, n)),
+            lambda _: jnp.zeros((n, d), jnp.float32), None)
+        msgs = {"c": c, "t": jnp.full((n,), state.k, jnp.float32)}
+        buf = buffer_send(state.buf, msgs, send_mask,
+                          schedule.sample(k_tau, n), state.k)
+        buf, msg, arrived = buffer_receive(buf, state.k)
+
+        h = state.h + gamma * arrived[:, None] * msg["c"]
+        bits = state.bits_per_node + arrived.astype(
+            state.bits_per_node.dtype) * (d * Q.bits_per_value)
+        acc_g, acc_n, g_tilde, flush, reset = fedbuff_accumulate(
+            state.acc_g, state.acc_n, msg["c"] + state.h, arrived, buffer_k)
+
+        w = jnp.where(flush, state.w - alpha * g_tilde, state.w)
+        new = DianaAsyncState(w, h, state.k + 1, bits, buf,
+                              reset(acc_g), reset(acc_n))
+        return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
+                     "n_active": jnp.sum(send_mask),
+                     "n_arrived": jnp.sum(arrived),
+                     "buffered": new.acc_n,
+                     "flushed": flush.astype(jnp.float32),
+                     "staleness_mean": applied_staleness(state.k, msg["t"],
+                                                         arrived),
+                     "bits_per_node": new.bits_per_node}
+
+    return step
 
 
 class FedNLState(NamedTuple):
@@ -156,3 +246,68 @@ def make_gd_step(alpha: float, local_grad: Callable, n_workers: int,
 def init_gd(w0, n_workers):
     return GDState(w0.astype(jnp.float32), jnp.zeros((), jnp.int32),
                    jnp.zeros((n_workers,), bits_dtype()))
+
+
+class GDAsyncState(NamedTuple):
+    w: jnp.ndarray
+    k: jnp.ndarray
+    bits_per_node: jnp.ndarray   # [n]
+    buf: MessageBuffer           # in-flight {g [n,d], t [n]}
+    acc_g: jnp.ndarray           # [d]
+    acc_n: jnp.ndarray
+
+
+def init_gd_async(w0, n_workers, max_delay: int) -> GDAsyncState:
+    base = init_gd(w0, n_workers)
+    proto = {"g": jnp.zeros((n_workers, w0.shape[0]), jnp.float32),
+             "t": jnp.zeros((n_workers,), jnp.float32)}
+    return GDAsyncState(base.w, base.k, base.bits_per_node,
+                        init_buffer(proto, max_delay),
+                        jnp.zeros((w0.shape[0],), jnp.float32),
+                        jnp.zeros((), jnp.float32))
+
+
+def make_gd_async_step(alpha: float, local_grad: Callable, n_workers: int,
+                       schedule: StalenessSchedule, buffer_k: int,
+                       participation: float = 1.0,
+                       sampling: str = "bernoulli"):
+    """Uncompressed GD with buffered delayed gradients — the classic
+    stale-gradient baseline the staleness ablations compare against."""
+
+    def step(state: GDAsyncState, key):
+        d = state.w.shape[0]
+        k_g, k_p = jax.random.split(key)                    # == sync split
+        k_tau = jax.random.fold_in(key, ASYNC_SALT)
+        mask = participation_mask(k_p, n_workers, participation, sampling)
+        send_mask = mask * (1.0 - buffer_busy(state.buf))
+        # skip the n gradient evaluations on rounds where everyone is busy
+        g_all = jax.lax.cond(
+            jnp.any(send_mask > 0),
+            lambda _: jax.vmap(
+                lambda i: local_grad(state.w, i,
+                                     jax.random.fold_in(k_g, i)))(
+                    jnp.arange(n_workers)),
+            lambda _: jnp.zeros((n_workers, d), jnp.float32), None)
+        msgs = {"g": g_all, "t": jnp.full((n_workers,), state.k, jnp.float32)}
+        buf = buffer_send(state.buf, msgs, send_mask,
+                          schedule.sample(k_tau, n_workers), state.k)
+        buf, msg, arrived = buffer_receive(buf, state.k)
+
+        bits = state.bits_per_node + arrived.astype(
+            state.bits_per_node.dtype) * (d * 32.0)
+        acc_g, acc_n, g, flush, reset = fedbuff_accumulate(
+            state.acc_g, state.acc_n, msg["g"], arrived, buffer_k)
+
+        w = jnp.where(flush, state.w - alpha * g, state.w)
+        new = GDAsyncState(w, state.k + 1, bits, buf,
+                           reset(acc_g), reset(acc_n))
+        return new, {"g_tilde_norm": jnp.linalg.norm(g),
+                     "n_active": jnp.sum(send_mask),
+                     "n_arrived": jnp.sum(arrived),
+                     "buffered": new.acc_n,
+                     "flushed": flush.astype(jnp.float32),
+                     "staleness_mean": applied_staleness(state.k, msg["t"],
+                                                         arrived),
+                     "bits_per_node": new.bits_per_node}
+
+    return step

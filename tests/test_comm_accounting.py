@@ -99,6 +99,37 @@ def test_participation_mask_properties():
         participation_mask(key, 8, 0.5, "nope")
 
 
+@pytest.mark.parametrize("p", [0.01, 0.3, 0.5, 0.9])
+def test_choice_samples_exactly_k_under_scan_and_vmap(p):
+    """kind="choice" contract: exactly max(1, round(p*n)) workers every
+    round — including p small enough that round(p*n) == 0 — and the count
+    holds when the mask is drawn inside scan and vmap tracing."""
+    n = 8
+    k_expect = max(1, round(p * n))
+    keys = jax.random.split(jax.random.key(42), 64)
+    _, scanned = jax.lax.scan(
+        lambda c, k: (c, participation_mask(k, n, p, "choice")), 0, keys)
+    vmapped = jax.vmap(
+        lambda k: participation_mask(k, n, p, "choice"))(keys)
+    for masks in (np.asarray(scanned), np.asarray(vmapped)):
+        assert masks.shape == (64, n)
+        assert set(np.unique(masks)) <= {0.0, 1.0}
+        np.testing.assert_array_equal(masks.sum(axis=1), k_expect)
+    # scan and vmap consume the same keys => identical masks
+    np.testing.assert_array_equal(np.asarray(scanned), np.asarray(vmapped))
+
+
+def test_participation_p_nonpositive_raises():
+    """p <= 0 cannot mean 'sample nobody forever' — both sampling kinds
+    reject it instead of silently producing a dead federation."""
+    key = jax.random.key(0)
+    for kind in ("bernoulli", "choice"):
+        with pytest.raises(ValueError):
+            participation_mask(key, 8, 0.0, kind)
+        with pytest.raises(ValueError):
+            participation_mask(key, 8, -0.25, kind)
+
+
 def test_bits_dtype_unified_across_methods():
     """init_diana/init_fednl/init_gd used to hard-code f32 zeros while
     flecs was x64-aware; all four must agree and be [n]-shaped."""

@@ -3,6 +3,8 @@
 ``hypothesis`` is an optional dev dependency (requirements-dev.txt); the
 module skips cleanly instead of failing collection when it is absent.
 """
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,9 +13,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.compressors import (decode_int8, encode_int8, get_compressor,
-                                    identity, natural, random_dithering,
-                                    top_k)
+from repro.core.compressors import (decode_int8, dither_bits, encode_int8,
+                                    get_compressor, identity, natural,
+                                    random_dithering, top_k)
 
 vec = st.lists(st.floats(-100, 100, allow_nan=False, width=32),
                min_size=2, max_size=64).map(
@@ -49,6 +51,50 @@ def test_dithering_second_moment_bound(x, s):
     second = float(jnp.mean(jnp.sum(qs * qs, axis=-1)))
     omega = Q.omega(x.size)
     assert second <= (1 + omega) * nrm2 * 1.05 + 1e-5
+
+
+@settings(max_examples=25, deadline=None)
+@given(vec, st.sampled_from([4, 16, 64, 128]))
+def test_dithering_error_variance_bound(x, s):
+    """Definition 3 membership: E‖Q(x) − x‖² ≤ ω‖x‖² with ω = d/(4s²).
+
+    The expected error of ∞-norm dithering is available in closed form
+    (per-coordinate stochastic rounding: p(1-p)·(‖x‖_∞/s)²), so the bound
+    is checked *deterministically*, and the sampled error is only required
+    to agree with the analytic value within statistical tolerance."""
+    nrm2 = float(np.sum(np.float64(x) ** 2))
+    if nrm2 == 0:
+        return
+    Q = random_dithering(s)
+    norm = float(np.max(np.abs(x)))
+    y = np.abs(np.float64(x)) / norm * s
+    p = y - np.floor(y)
+    analytic = float(np.sum(p * (1 - p))) * (norm / s) ** 2
+    assert analytic <= Q.omega(x.size) * nrm2 * (1 + 1e-6) + 1e-12
+
+    keys = jax.random.split(jax.random.key(5), 512)
+    qs = jax.vmap(lambda k: Q.compress(k, jnp.asarray(x)))(keys)
+    err = float(jnp.mean(jnp.sum((qs - jnp.asarray(x)) ** 2, axis=-1)))
+    tol = 0.25 * analytic + 6.0 * (norm / s) ** 2 / np.sqrt(512) + 1e-6
+    assert abs(err - analytic) <= tol
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 30000),
+       st.lists(st.integers(1, 64), min_size=1, max_size=3))
+def test_dither_bits_formula_random_levels_and_shapes(s, dims):
+    """Wire accounting: an s-level dithered tensor of d elements ships
+    exactly ceil(log2(2s+1))·d payload bits — for the static Compressor,
+    the traced-sweep ``dither_bits`` helper, and any tensor shape.
+    (Levels are capped at 30k: far above any practical dithering level,
+    below where float32 log2 ulp error could misround the ceiling.)"""
+    d = int(np.prod(dims))
+    expect = math.ceil(math.log2(2 * s + 1))
+    assert random_dithering(s).bits_per_value == expect
+    # traced-safe helper agrees, on python ints and traced f32 scalars alike
+    assert float(dither_bits(s)) == expect
+    assert float(dither_bits(jnp.float32(s))) == expect
+    assert float(dither_bits(jnp.float32(s))) * d == expect * d
 
 
 @settings(max_examples=20, deadline=None)

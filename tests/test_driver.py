@@ -56,6 +56,82 @@ def test_traces_stack_and_record_hook():
                                np.asarray(st.bits_per_node))
 
 
+def test_record_every_matches_dense_trace():
+    """record_every=E traces have length iters // E and equal the dense
+    trace at the recorded indices (rows E-1, 2E-1, …)."""
+    step = make_flecs_step(CFG, LG, LH)
+    st0 = init_state(jnp.zeros(PROB.d), PROB.n_workers)
+    iters, every = 30, 10
+    rec = lambda s: PROB.metrics(s.w)                       # noqa: E731
+    st_d, dense = run_experiment(step, st0, jax.random.key(8), iters,
+                                 record=rec)
+    st_t, thin = run_experiment(step, st0, jax.random.key(8), iters,
+                                record=rec, record_every=every)
+    assert thin["F"].shape == (iters // every,)
+    assert thin["bits_per_node"].shape == (iters // every, PROB.n_workers)
+    for key in ("F", "grad_sq", "bits_per_node", "g_tilde_norm"):
+        np.testing.assert_array_equal(np.asarray(thin[key]),
+                                      np.asarray(dense[key])[every - 1::every])
+    # identical final state either way (thinning only affects the ys)
+    np.testing.assert_array_equal(np.asarray(st_d.w), np.asarray(st_t.w))
+    with pytest.raises(ValueError):
+        run_experiment(step, st0, jax.random.key(8), 30, record_every=7)
+
+
+def test_trace_dtype_bf16_keeps_bits_ledger_exact():
+    """trace_dtype=bf16 quarters trace memory for long runs, but the bits
+    ledger must stay in driver.bits_dtype() (bf16 loses integer counts)."""
+    from repro.core.driver import bits_dtype
+    step = make_flecs_step(CFG, LG, LH)
+    st0 = init_state(jnp.zeros(PROB.d), PROB.n_workers)
+    _, tr = run_experiment(step, st0, jax.random.key(1), 8,
+                           record=lambda s: PROB.metrics(s.w),
+                           trace_dtype=jnp.bfloat16)
+    assert tr["F"].dtype == jnp.bfloat16
+    assert tr["g_tilde_norm"].dtype == jnp.bfloat16
+    assert tr["bits_per_node"].dtype == bits_dtype()
+    # ledger values are exact, not rounded
+    _, tr32 = run_experiment(step, st0, jax.random.key(1), 8)
+    np.testing.assert_array_equal(np.asarray(tr["bits_per_node"]),
+                                  np.asarray(tr32["bits_per_node"]))
+    # sweep path honors the same contract (+ record_every)
+    hp = hparam_grid([1.0], [1.0], [16.0, 64.0])
+    sts, trs = run_sweep(make_flecs_sweep_step(CFG, LG, LH), hp, st0,
+                         jax.random.key(2), 8,
+                         record=lambda s: PROB.metrics(s.w),
+                         record_every=4, trace_dtype=jnp.bfloat16)
+    assert trs["F"].shape == (2, 2) and trs["F"].dtype == jnp.bfloat16
+    assert trs["bits_per_node"].dtype == bits_dtype()
+
+
+def test_sweep_matches_independent_runs():
+    """run_sweep over a [G] grid == G standalone run_experiment calls with
+    the same per-grid-point key streams: the stochastic compression draws
+    and bit ledgers match bit-for-bit (same keys), while float iterates
+    agree to the last-ulp tolerance of batched vs unbatched eigh/qr
+    kernels."""
+    hp = hparam_grid([0.5, 1.0], [1.0], [16.0])
+    sweep = make_flecs_sweep_step(CFG, LG, LH)
+    st0 = init_state(jnp.zeros(PROB.d), PROB.n_workers)
+    iters = 9
+    rec = lambda s: PROB.metrics(s.w)                       # noqa: E731
+    sts, tr = run_sweep(sweep, hp, st0, jax.random.key(13), iters,
+                        record=rec)
+    G = hp.alpha.shape[0]
+    for g in range(G):
+        hp_g = jax.tree.map(lambda a: a[g], hp)
+        st_g, tr_g = run_experiment(
+            lambda st, k: sweep(hp_g, st, k), st0,
+            jax.random.split(jax.random.key(13), G)[g], iters, record=rec)
+        # key streams identical => identical dither draws => exact ledgers
+        np.testing.assert_array_equal(np.asarray(tr_g["bits_per_node"]),
+                                      np.asarray(tr["bits_per_node"][g]))
+        np.testing.assert_allclose(np.asarray(st_g.w), np.asarray(sts.w[g]),
+                                   rtol=0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(tr_g["F"]),
+                                   np.asarray(tr["F"][g]), rtol=1e-6)
+
+
 def test_masked_mean():
     x = jnp.asarray([[1.0, 2.0], [3.0, 4.0], [5.0, 6.0]])
     np.testing.assert_allclose(
