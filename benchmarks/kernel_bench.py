@@ -33,10 +33,12 @@ def run(csv_rows: list):
             Q = get_compressor(name)
             f = jax.jit(lambda k, x, Q=Q: Q.compress(k, x))
             us = _time(f, jax.random.key(0), x)
+            # dimension-aware wire accounting: top-k pays per kept value
+            bpv = Q.bits(n) / n
             print(f"  {name:10s} n={n:7d}: {us:9.1f} us "
-                  f"({Q.bits_per_value:.0f} bits/val)")
+                  f"({bpv:.1f} bits/val)")
             csv_rows.append((f"compressor/{name}/n{n}", us,
-                             f"bits={Q.bits_per_value:.0f}"))
+                             f"bits={bpv:.1f}"))
 
     print("\n=== FLECS-CGD step cost vs (d, m) — worker O(md²) claim ===")
     for d in (123, 500):

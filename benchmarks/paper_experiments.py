@@ -10,8 +10,11 @@ Comparison  — vs DIANA / FedNL / GD baselines (as the FLECS paper does).
 Beyond-paper — dithering-level ablation, a *vmapped* step-size x level grid
               (one compiled program for the whole grid), a partial-
               participation ablation (FedNL/FedLab-style client sampling),
-              and an async buffered-aggregation grid (FedBuff-style delay x
-              participation, bits charged at the arrival round).
+              an async buffered-aggregation grid (FedBuff-style delay x
+              participation, bits charged at the arrival round), and the
+              full traced-spec ablation grids: (grad_s x hess_s x beta) and
+              auto-damped (tau x buffer_k), each ONE compiled vmapped
+              program (``run_sweep`` / ``run_async_sweep``).
 
 Every trajectory is ONE lax.scan program via ``repro.core.driver`` —
 per-iteration metrics are recorded inside the scan, not by re-entering the
@@ -19,6 +22,11 @@ host between rounds.
 
 Emits CSV rows ``name,us_per_call,derived`` plus human-readable tables;
 raw trajectories land in benchmarks/out/*.json for plotting.
+
+Standalone smoke entry (the CI sweep-smoke job)::
+
+    PYTHONPATH=src python benchmarks/paper_experiments.py \
+        --grids-only --d 16 --workers 4 --r 16 --iters 6
 """
 from __future__ import annotations
 
@@ -30,10 +38,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.driver import StalenessSchedule, run_experiment, run_sweep
-from repro.core.flecs import (FlecsConfig, bits_per_round, hparam_grid,
-                              init_async_state, init_state,
-                              make_flecs_async_step, make_flecs_step,
+from repro.core.driver import (StalenessSchedule, run_async_sweep,
+                               run_experiment, run_sweep)
+from repro.core.flecs import (FlecsConfig, async_hparam_grid, bits_per_round,
+                              hparam_grid, init_async_state, init_state,
+                              make_flecs_async_step,
+                              make_flecs_async_sweep_step, make_flecs_step,
                               make_flecs_sweep_step)
 from repro.data.logreg import make_problem
 from repro.optim.baselines import (init_diana, init_fednl, init_gd,
@@ -217,6 +227,62 @@ def participation_ablation(prob, iters=300):
     return rows
 
 
+def ablation_grid(prob, iters=200):
+    """Traced-spec ablation: the (grad_s x hess_s x beta) cube the paper's
+    fixed s=64/beta=1 choices sit in, as ONE compiled vmapped scan — the
+    Hessian compressor level and beta are traced sweep axes now, so no
+    recompiles per point."""
+    lg, lh = prob.make_oracles()
+    cfg = FlecsConfig(m=2)
+    hp = hparam_grid([1.0], [1.0], grad_levels=[16.0, 64.0],
+                     betas=[0.5, 1.0], hess_levels=[16.0, 64.0])
+    sweep = make_flecs_sweep_step(cfg, lg, lh)
+    t0 = time.perf_counter()
+    sts, tr = run_sweep(sweep, hp, init_state(jnp.zeros(prob.d),
+                                              prob.n_workers),
+                        jax.random.key(0), iters,
+                        record=lambda st: prob.metrics(st.w))
+    jax.block_until_ready(sts)
+    G = hp.alpha.shape[0]
+    dt = (time.perf_counter() - t0) / (iters * G) * 1e6
+    rows = [{"grad_s": float(hp.grad_s[g]), "hess_s": float(hp.hess_s[g]),
+             "beta": float(hp.beta[g]), "F": float(tr["F"][g, -1]),
+             "grad_sq": float(tr["grad_sq"][g, -1]),
+             "Mbits": float(jnp.max(sts.bits_per_node[g])) / 1e6}
+            for g in range(G)]
+    return rows, dt
+
+
+def async_grid(prob, iters=600):
+    """Traced staleness ablation: the (tau x buffer_k) grid as ONE compiled
+    vmapped scan sharing a max-delay MessageBuffer shape, with per-point
+    alpha auto-damped (driver.damped_alpha) instead of hand-tuned."""
+    lg, lh = prob.make_oracles()
+    n = prob.n_workers
+    p = 0.5
+    cfg = FlecsConfig(m=2, grad_compressor="dither64",
+                      hess_compressor="dither64",
+                      participation=p, sampling="choice")
+    taus = [0, 2, 4]
+    Ks = sorted({1.0, float(max(1, n // 4)), float(n)})
+    ahp = async_hparam_grid(taus, Ks, alpha=1.0, auto_damp=(p, n))
+    sweep = make_flecs_async_sweep_step(cfg, lg, lh)
+    st0 = init_async_state(jnp.zeros(prob.d), n, cfg.m, max(taus))
+    t0 = time.perf_counter()
+    sts, tr = run_async_sweep(sweep, ahp, st0, jax.random.key(0), iters,
+                              record=lambda st: prob.metrics(st.w))
+    jax.block_until_ready(sts)
+    G = ahp.tau.shape[0]
+    dt = (time.perf_counter() - t0) / (iters * G) * 1e6
+    rows = [{"tau": int(ahp.tau[g]), "K": float(ahp.buffer_k[g]),
+             "alpha": float(ahp.hp.alpha[g]), "F": float(tr["F"][g, -1]),
+             "grad_sq": float(tr["grad_sq"][g, -1]),
+             "Mbits_mean": float(jnp.mean(sts.bits_per_node[g])) / 1e6,
+             "flushes": float(jnp.sum(tr["flushed"][g]))}
+            for g in range(G)]
+    return rows, dt
+
+
 def staleness_ablation(prob, iters=600):
     """Beyond-paper: FedBuff-style async aggregation — a delay (tau) x
     participation (p) grid.  Messages arrive tau rounds after they were
@@ -252,6 +318,32 @@ def staleness_ablation(prob, iters=600):
                          "Mbits_mean": float(jnp.mean(st.bits_per_node)) / 1e6,
                          "staleness_mean": stale})
     return rows
+
+
+def run_grids(prob, csv_rows: list, iters_sync=200, iters_async=600):
+    """The two traced-spec ablation grids — TWO compiled programs total.
+    Shared by the full benchmark run and the CI sweep-smoke job."""
+    OUT.mkdir(exist_ok=True)
+    abl, dt_a = ablation_grid(prob, iters=iters_sync)
+    json.dump(abl, open(OUT / "ablation_grid.json", "w"), indent=1)
+    print("\n=== Traced-spec ablation: grad_s x hess_s x beta, ONE program "
+          "===")
+    for r in abl:
+        print(f"  s={r['grad_s']:4.0f} hess_s={r['hess_s']:4.0f} "
+              f"beta={r['beta']:.2f}: F={r['F']:.5f} Mbits={r['Mbits']:.2f}")
+        csv_rows.append((f"grid/s{r['grad_s']:.0f}-hs{r['hess_s']:.0f}"
+                         f"-b{r['beta']}", dt_a, f"F={r['F']:.5f}"))
+
+    stale, dt_s = async_grid(prob, iters=iters_async)
+    json.dump(stale, open(OUT / "async_grid.json", "w"), indent=1)
+    print("\n=== Traced staleness grid: tau x buffer_k, auto-damped alpha, "
+          "ONE program ===")
+    for r in stale:
+        print(f"  tau={r['tau']} K={r['K']:4.1f} alpha={r['alpha']:.3f}: "
+              f"F={r['F']:.5f} Mbits/node={r['Mbits_mean']:.2f} "
+              f"flushes={r['flushes']:.0f}")
+        csv_rows.append((f"asyncgrid/tau{r['tau']}-K{r['K']:.0f}", dt_s,
+                         f"F={r['F']:.5f};alpha={r['alpha']:.3f}"))
 
 
 def run(csv_rows: list):
@@ -311,6 +403,8 @@ def run(csv_rows: list):
         csv_rows.append((f"grid/a{r['alpha']}-s{r['grad_s']:.0f}", dt_g,
                          f"F={r['F']:.5f}"))
 
+    run_grids(prob, csv_rows)
+
     part = participation_ablation(prob)
     json.dump(part, open(OUT / "participation.json", "w"), indent=1)
     print("\n=== Partial participation (choice sampling, beyond-paper) ===")
@@ -341,3 +435,40 @@ def run(csv_rows: list):
         print(f"{k:10s} F@end={last['F']:.5f} |g|^2={last['grad_sq']:.2e} "
               f"Mbits={last['bits_per_node'] / 1e6:.2f}")
         csv_rows.append((f"baseline/{k}", dt, f"F={last['F']:.5f}"))
+
+
+def main():
+    """Standalone entry for the CI sweep-smoke job: run just the two
+    traced-spec ablation grids at toy size and land the JSONs in
+    benchmarks/out/ (uploaded as CI artifacts)."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grids-only", action="store_true",
+                    help="run only ablation_grid + async_grid")
+    ap.add_argument("--d", type=int, default=123,
+                    help="problem size (with --grids-only)")
+    ap.add_argument("--workers", type=int, default=20)
+    ap.add_argument("--r", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=200)
+    args = ap.parse_args()
+    if not args.grids_only and (args.d, args.workers, args.r,
+                                args.iters) != (123, 20, 64, 200):
+        # the full run() reproduces the paper's fixed problem sizes; fail
+        # loudly rather than silently dropping the size flags
+        ap.error("--d/--workers/--r/--iters require --grids-only")
+
+    csv_rows: list = []
+    if args.grids_only:
+        prob = make_problem(d=args.d, n_workers=args.workers, r=args.r,
+                            mu=1e-3, seed=0)
+        run_grids(prob, csv_rows, iters_sync=args.iters,
+                  iters_async=3 * args.iters)
+    else:
+        run(csv_rows)
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

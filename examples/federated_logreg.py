@@ -16,14 +16,17 @@ bits ledger in action.  With --staleness TAU > 0 the FLECS-CGD / DIANA / GD
 rows switch to the FedBuff-style async engine: updates arrive TAU rounds
 late (per --delay-kind), buffer on the server until --buffer-k have
 accumulated, and bits are charged at the arrival round — the extra
-stale/round column reports the mean age of applied updates.
+stale/round column reports the mean age of applied updates.  --auto-alpha
+replaces the hand-tuned per-mode step sizes with the variance-motivated
+``driver.damped_alpha`` rule (alpha0 · min(1, p·K/n)).
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.driver import StalenessSchedule, run_experiment
+from repro.core.driver import (StalenessSchedule, damped_alpha,
+                               run_experiment)
 from repro.core.flecs import (FlecsConfig, init_async_state, init_state,
                               make_flecs_async_step, make_flecs_step)
 from repro.data.logreg import make_problem
@@ -66,6 +69,10 @@ def main():
                     default="fixed")
     ap.add_argument("--buffer-k", type=int, default=0,
                     help="FedBuff aggregation goal (0 = auto: n/4, min 1)")
+    ap.add_argument("--auto-alpha", action="store_true",
+                    help="derive the step size via driver.damped_alpha "
+                         "(alpha0=1, scaled by p·K/n) instead of the "
+                         "hand-tuned per-mode defaults")
     args = ap.parse_args()
 
     prob = make_problem(d=args.d, n_workers=args.workers, r=64, mu=1e-3)
@@ -76,7 +83,15 @@ def main():
     K = args.buffer_k or max(1, args.workers // 4)
     # second-order steps need damping once client sampling / staleness add
     # variance (stale preconditioned updates amplify subset noise)
-    alpha = 1.0 if (p >= 1.0 and tau == 0) else (0.5 if tau == 0 else 0.2)
+    if args.auto_alpha:
+        # synchronous rounds flush a whole sampled cohort at once, so the
+        # effective buffer size is round(p·n)
+        K_eff = K if tau > 0 else max(1, round(p * args.workers))
+        alpha = float(damped_alpha(1.0, p, K_eff, args.workers))
+        print(f"auto-damped alpha = {alpha:.3f} "
+              f"(p={p}, K={K_eff}, n={args.workers})")
+    else:
+        alpha = 1.0 if (p >= 1.0 and tau == 0) else (0.5 if tau == 0 else 0.2)
 
     for name, gc in (("FLECS", "identity"), ("FLECS-CGD", "dither64")):
         cfg = FlecsConfig(m=1, alpha=alpha, grad_compressor=gc,

@@ -1,20 +1,29 @@
 """FLECS-CGD core: the paper's primary contribution as a composable library.
 
+Traced compressor algebra (specs as vmappable sweep axes):
+    from repro.core.compressors import CompressorSpec, compress, spec_bits
 Exact mode (paper-scale problems):
     from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
 Experiment engine (lax.scan runs, client sampling, vmapped sweeps):
-    from repro.core.driver import run_experiment, run_sweep
+    from repro.core.driver import run_experiment, run_sweep, run_async_sweep
 DL-scale trainer (TPU-pod realization):
     from repro.core.dl_flecs import FlecsDLConfig, make_flecs_train_step
 """
-from repro.core.compressors import Compressor, get_compressor
-from repro.core.driver import (participation_mask, run_experiment, run_sweep)
-from repro.core.flecs import (FlecsConfig, FlecsHParams, FlecsState,
-                              bits_per_round, hparam_grid, init_state,
-                              make_flecs_step, make_flecs_sweep_step)
+from repro.core.compressors import (Compressor, CompressorSpec, compress,
+                                    get_compressor, spec_bits, spec_from_name,
+                                    spec_omega)
+from repro.core.driver import (damped_alpha, participation_mask,
+                               run_async_sweep, run_experiment, run_sweep)
+from repro.core.flecs import (FlecsAsyncHParams, FlecsConfig, FlecsHParams,
+                              FlecsState, async_hparam_grid, bits_per_round,
+                              hparam_grid, init_state, make_flecs_step,
+                              make_flecs_sweep_step)
 from repro.core.sketch import sketch
 
-__all__ = ["Compressor", "get_compressor", "FlecsConfig", "FlecsHParams",
-           "FlecsState", "bits_per_round", "hparam_grid", "init_state",
-           "make_flecs_step", "make_flecs_sweep_step", "participation_mask",
+__all__ = ["Compressor", "CompressorSpec", "compress", "get_compressor",
+           "spec_bits", "spec_from_name", "spec_omega",
+           "FlecsAsyncHParams", "FlecsConfig", "FlecsHParams", "FlecsState",
+           "async_hparam_grid", "bits_per_round", "damped_alpha",
+           "hparam_grid", "init_state", "make_flecs_step",
+           "make_flecs_sweep_step", "participation_mask", "run_async_sweep",
            "run_experiment", "run_sweep", "sketch"]

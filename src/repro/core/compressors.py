@@ -1,54 +1,109 @@
-"""Unbiased compression operators Q ∈ U(ω) (Definition 3) and the biased
-top-k contraction used for the sketched-Hessian difference C(·).
+"""Traced compressor algebra: unbiased operators Q ∈ U(ω) (Definition 3)
+and the biased top-k contraction, as *data* instead of Python callables.
 
-Wire-format accounting: every compressor reports ``bits(x)`` — the exact
-payload size a real federation would ship — so the benchmarks can reproduce
-the paper's communicated-bits x-axis, and `encode_int8/decode_int8` give the
+A :class:`CompressorSpec` is a pytree (family id + parameters: dithering
+level ``s``, top-k fraction ``frac``) whose fields may be **traced** jax
+values.  The three unified entry points
+
+    compress(spec, key, x)   — apply Q
+    spec_bits(spec, d)       — exact uplink payload bits of a d-element tensor
+    spec_omega(spec, d)      — variance bound ω (Definition 3)
+
+dispatch on the family id via ``lax.switch``, so a whole grid of compressor
+choices (levels, fractions, even families) becomes a vmappable axis: one
+compiled program sweeps every point (see ``repro.core.flecs``'s
+``make_flecs_sweep_step`` / ``driver.run_sweep``).  The static
+:class:`Compressor` wrapper (and ``get_compressor(name)``) is a thin veneer
+over the same spec machinery, so the static and sweep paths are
+trace-identical by construction — same ops, same key consumption.
+
+Wire-format accounting: ``spec_bits`` reports the exact payload a real
+federation would ship, reproducing the paper's communicated-bits x-axis.
+Top-k is dimension-aware: each kept value costs its 32-bit payload plus a
+⌈log2 d⌉-bit index (the old flat ``64·frac`` per element hardcoded a 32-bit
+index).  ``encode_int8``/``decode_int8``/``shared_scale_levels`` give the
 integer wire format used by the TPU-pod compressed all-reduce.
 
 Random dithering (the paper's experimental choice, s levels, p = ∞):
     Q(x) = ||x||_inf * sign(x) * xi(|x|/||x||_inf)
 where xi stochastically rounds to the grid {0, 1/s, ..., 1}.  Unbiased with
-ω ≤ 1/4 + sqrt(d)/s (standard QSGD bound for the 2-norm variant; the ∞-norm
-variant used here is unbiased with bounded second moment — tested by
-property tests).
+ω = d/(4s²) for the ∞-norm variant (tested by property tests).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import NamedTuple, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+# Family ids — the lax.switch branch index of every spec-dispatched op.
+FAMILY_IDENTITY = 0
+FAMILY_DITHER = 1
+FAMILY_NATURAL = 2
+FAMILY_TOPK = 3
 
 
-@dataclasses.dataclass(frozen=True)
-class Compressor:
-    """Q(key, x) -> x_hat, plus wire-size accounting in bits/element."""
-    name: str
-    compress: Callable        # (key, x) -> x_hat (same shape/dtype as x)
-    bits_per_value: float     # payload bits per tensor element
-    omega_fn: Callable        # d -> ω variance bound (Definition 3)
-    unbiased: bool = True
+class CompressorSpec(NamedTuple):
+    """Traced compressor description: (family, s, frac) as jnp scalars —
+    or [G] arrays across a sweep-grid axis.
 
-    def omega(self, d: int) -> float:
-        return float(self.omega_fn(d))
+    family: int32 branch id (FAMILY_*).
+    s:      float32 dithering level count (FAMILY_DITHER; ignored elsewhere).
+    frac:   float32 kept fraction in (0, 1] (FAMILY_TOPK; ignored elsewhere).
+    """
+    family: jnp.ndarray
+    s: jnp.ndarray
+    frac: jnp.ndarray
+
+
+def identity_spec() -> CompressorSpec:
+    return CompressorSpec(jnp.int32(FAMILY_IDENTITY), jnp.float32(1.0),
+                          jnp.float32(1.0))
+
+
+def dither_spec(s) -> CompressorSpec:
+    """Random ∞-norm dithering with a possibly *traced* level count s.
+    A [G] array of levels yields a [G] spec (a sweep-grid axis)."""
+    s = jnp.asarray(s, jnp.float32)
+    return CompressorSpec(jnp.full(s.shape, FAMILY_DITHER, jnp.int32), s,
+                          jnp.ones(s.shape, jnp.float32))
+
+
+def natural_spec() -> CompressorSpec:
+    return CompressorSpec(jnp.int32(FAMILY_NATURAL), jnp.float32(1.0),
+                          jnp.float32(1.0))
+
+
+def topk_spec(frac) -> CompressorSpec:
+    """Biased top-k contraction keeping a possibly *traced* fraction.
+    A [G] array of fractions yields a [G] spec (a sweep-grid axis)."""
+    frac = jnp.asarray(frac, jnp.float32)
+    return CompressorSpec(jnp.full(frac.shape, FAMILY_TOPK, jnp.int32),
+                          jnp.ones(frac.shape, jnp.float32), frac)
+
+
+def spec_from_name(name: str) -> CompressorSpec:
+    """Parse the registry names ("identity", "dither64", "natural",
+    "topk0.1") into specs — the static entry into the traced algebra.
+    Parameters live IN the name (no kwargs, so a mis-parameterized call
+    fails loudly instead of running at a silent default)."""
+    if name == "identity":
+        return identity_spec()
+    if name.startswith("dither"):
+        return dither_spec(int(name[len("dither"):] or 64))
+    if name == "natural":
+        return natural_spec()
+    if name.startswith("topk"):
+        return topk_spec(float(name[len("topk"):] or 0.1))
+    raise ValueError(name)
 
 
 # ---------------------------------------------------------------------------
-# Identity (no compression; FLECS's gradient path)
+# Family implementations (each also usable standalone with traced params)
 # ---------------------------------------------------------------------------
 
-def identity() -> Compressor:
-    return Compressor("identity", lambda key, x: x, 32.0, lambda d: 0.0)
-
-
-# ---------------------------------------------------------------------------
-# Random dithering
-# ---------------------------------------------------------------------------
-
-def _dither(key, x, s: int):
+def _dither(key, x, s):
     xf = x.astype(jnp.float32)
     norm = jnp.max(jnp.abs(xf))
     norm = jnp.where(norm == 0, 1.0, norm)
@@ -62,12 +117,8 @@ def _dither(key, x, s: int):
 
 
 def dither(key, x, s):
-    """Random dithering with a possibly *traced* level count s.
-
-    Same math as ``random_dithering(s).compress`` but s may be a jnp scalar,
-    which is what lets ``jax.vmap`` sweep compressor levels inside one
-    compiled program (see ``repro.core.flecs.make_flecs_sweep_step``).
-    """
+    """Random dithering with a possibly *traced* level count s — what lets
+    ``jax.vmap`` sweep compressor levels inside one compiled program."""
     return _dither(key, x, s)
 
 
@@ -76,22 +127,9 @@ def dither_bits(s):
     return jnp.ceil(jnp.log2(2.0 * s + 1.0))
 
 
-def random_dithering(s: int = 64) -> Compressor:
-    """∞-norm random dithering with s levels.  Payload: sign+level fits in
-    ceil(log2(2s+1)) bits (+32 for the norm, amortized)."""
-    bits = float(np.ceil(np.log2(2 * s + 1)))
-    # ω for ∞-norm dithering: per-coordinate stochastic-rounding variance is
-    # ≤ ||x||²_inf/(4s²); summed over d coords and bounded by ||x||²_inf ≤
-    # ||x||²_2:  E||Q(x)-x||² ≤ d/(4s²)·||x||² →  ω = d/(4s²).
-    return Compressor(f"dither{s}", lambda key, x: _dither(key, x, s),
-                      bits, lambda d, s=s: d / (4.0 * s * s))
-
-
-# ---------------------------------------------------------------------------
-# Natural compression (exponent-only, mantissa stochastic) [13]
-# ---------------------------------------------------------------------------
-
 def _natural(key, x):
+    """Natural compression [13]: keep the exponent, round the mantissa to a
+    power of two stochastically.  Unbiased with ω = 1/8 (tight at p = 1/3)."""
     xf = x.astype(jnp.float32)
     ax = jnp.abs(xf)
     lo = jnp.where(ax > 0, 2.0 ** jnp.floor(jnp.log2(jnp.maximum(ax, 1e-38))),
@@ -102,25 +140,139 @@ def _natural(key, x):
     return (jnp.sign(xf) * mag).astype(x.dtype)
 
 
+def _topk(key, x, frac):
+    """Top-k with a possibly *traced* fraction, via the k-th-largest
+    magnitude threshold: keep everything strictly above it plus the
+    lowest-index ties up to k = ceil(frac·d) — exactly ``lax.top_k``'s
+    selection (ties prefer the lower index), but k may be traced, and one
+    value-only sort is ~2x faster than argsort + scatter."""
+    del key
+    flat = x.reshape(-1)
+    d = flat.shape[0]
+    k = jnp.clip(jnp.ceil(frac * d).astype(jnp.int32), 1, d)
+    ax = jnp.abs(flat)
+    thresh = jnp.sort(ax)[d - k]                 # k-th largest magnitude
+    above = ax > thresh
+    n_above = jnp.sum(above.astype(jnp.int32))
+    ties = ax == thresh
+    tie_rank = jnp.cumsum(ties.astype(jnp.int32))          # 1-based
+    keep = above | (ties & (tie_rank <= k - n_above))
+    out = jnp.where(keep, flat, jnp.zeros((), flat.dtype))
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Unified spec-dispatched ops (lax.switch over the family id)
+# ---------------------------------------------------------------------------
+
+def compress(spec: CompressorSpec, key, x) -> jnp.ndarray:
+    """Q(x) under ``spec`` — every field may be traced, so the compressor
+    choice itself is a vmappable sweep axis."""
+    return jax.lax.switch(
+        spec.family,
+        (lambda: x,
+         lambda: _dither(key, x, spec.s),
+         lambda: _natural(key, x),
+         lambda: _topk(key, x, spec.frac)))
+
+
+def spec_bits(spec: CompressorSpec, d) -> jnp.ndarray:
+    """Exact uplink payload bits of compressing a d-element tensor.
+
+    identity: 32·d.
+    dither:   ⌈log2(2s+1)⌉·d (sign+level; the shared norm is 32 bits,
+              amortized as in the paper's accounting).
+    natural:  9·d (sign + 8-bit exponent).
+    top-k:    ⌈frac·d⌉ kept values, each shipping a 32-bit payload plus a
+              ⌈log2 d⌉-bit index — dimension-aware, unlike the old flat
+              64·frac per element which hardcoded a 32-bit index.
+    """
+    d = jnp.asarray(d, jnp.float32)
+    kept = jnp.clip(jnp.ceil(spec.frac * d), 1.0, d)
+    return jax.lax.switch(
+        spec.family,
+        (lambda: 32.0 * d,
+         lambda: dither_bits(spec.s) * d,
+         lambda: 9.0 * d,
+         lambda: kept * (32.0 + jnp.ceil(jnp.log2(jnp.maximum(d, 1.0))))))
+
+
+def spec_omega(spec: CompressorSpec, d) -> jnp.ndarray:
+    """Variance bound ω of Definition 3 (0 for identity; top-k is a biased
+    contraction, not in U(ω) — reported as 0 and flagged by ``unbiased``)."""
+    d = jnp.asarray(d, jnp.float32)
+    return jax.lax.switch(
+        spec.family,
+        (lambda: jnp.float32(0.0),
+         lambda: d / (4.0 * spec.s * spec.s),
+         lambda: jnp.float32(1.0 / 8.0),
+         lambda: jnp.float32(0.0)))
+
+
+# ---------------------------------------------------------------------------
+# Static wrapper (the thin registry veneer over the spec algebra)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    """A named static spec.  ``compress``/``bits``/``omega`` all route
+    through the traced algebra, so static and sweep paths are op-identical."""
+    name: str
+    spec: CompressorSpec
+    unbiased: bool = True
+
+    def compress(self, key, x):
+        return compress(self.spec, key, x)
+
+    def bits(self, d) -> float:
+        """Total payload bits for a d-element tensor (dimension-aware)."""
+        return float(spec_bits(self.spec, d))
+
+    @property
+    def bits_per_value(self) -> float:
+        """Per-element payload bits — only defined for the families whose
+        wire size is linear in d (identity/dither/natural)."""
+        if int(self.spec.family) == FAMILY_TOPK:
+            raise ValueError(
+                "top-k wire size is dimension-dependent ((32 + ceil(log2 d)) "
+                "bits per kept value); use .bits(d)")
+        return float(spec_bits(self.spec, 1))
+
+    def omega(self, d: int) -> float:
+        return float(spec_omega(self.spec, d))
+
+
+def identity() -> Compressor:
+    return Compressor("identity", identity_spec())
+
+
+def random_dithering(s: int = 64) -> Compressor:
+    """∞-norm random dithering with s levels; ω = d/(4s²)."""
+    return Compressor(f"dither{s}", dither_spec(s))
+
+
 def natural() -> Compressor:
-    return Compressor("natural", _natural, 9.0, lambda d: 1.0 / 8.0)
+    return Compressor("natural", natural_spec())
 
-
-# ---------------------------------------------------------------------------
-# Top-k (biased contraction — used for the Hessian-sketch difference C(·))
-# ---------------------------------------------------------------------------
 
 def top_k(frac: float = 0.1) -> Compressor:
-    def compress(key, x):
-        del key
-        flat = x.reshape(-1)
-        k = max(1, int(np.ceil(frac * flat.shape[0])))
-        _, idx = jax.lax.top_k(jnp.abs(flat), k)
-        out = jnp.zeros_like(flat).at[idx].set(flat[idx])
-        return out.reshape(x.shape)
+    """Biased top-k contraction (used for the Hessian-sketch difference)."""
+    return Compressor(f"topk{frac}", topk_spec(frac), unbiased=False)
 
-    return Compressor(f"topk{frac}", compress, 64.0 * frac,
-                      lambda d: 0.0, unbiased=False)
+
+def get_compressor(name: str) -> Compressor:
+    return Compressor(name, spec_from_name(name),
+                      unbiased=not name.startswith("topk"))
+
+
+def as_spec(c: Union[str, CompressorSpec, Compressor]) -> CompressorSpec:
+    """Accept a registry name, a Compressor, or a spec — the uniform
+    compressor argument every step maker takes."""
+    if isinstance(c, CompressorSpec):
+        return c
+    if isinstance(c, Compressor):
+        return c.spec
+    return spec_from_name(c)
 
 
 # ---------------------------------------------------------------------------
@@ -144,13 +296,17 @@ def decode_int8(levels, scale):
     return levels.astype(jnp.float32) * scale
 
 
-def get_compressor(name: str, **kw) -> Compressor:
-    if name == "identity":
-        return identity()
-    if name.startswith("dither"):
-        return random_dithering(int(name[len("dither"):] or 64))
-    if name == "natural":
-        return natural()
-    if name.startswith("topk"):
-        return top_k(float(name[len("topk"):] or 0.1))
-    raise ValueError(name)
+def shared_scale_levels(key, x, s, axes):
+    """int8 dithering levels with a pmax-shared scale — the collective
+    realization of ``dither_spec(s)`` inside a shard_map: the scale is
+    agreed across the mapped ``axes`` so the integer levels are
+    sum-compatible under an integer/f16 psum (the compressed all-reduce
+    of ``repro.core.dl_flecs``).  Returns (levels int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    norm = jax.lax.pmax(jnp.max(jnp.abs(xf)), axes)
+    norm = jnp.where(norm == 0, 1.0, norm)
+    y = xf / norm * s
+    lo = jnp.floor(y)
+    u = jax.random.uniform(key, x.shape)
+    levels = (lo + (u < (y - lo))).astype(jnp.int8)
+    return levels, norm / s

@@ -11,7 +11,11 @@ Mapping (DESIGN.md §3):
     a pmax-shared scale, summed via an integer psum (widened to int16 for
     ring accumulation: wire = 2x smaller than f32; the paper's idealized
     c/32 assumes a parameter-server that decodes each payload — a ring
-    all-reduce must carry the accumulation width).
+    all-reduce must carry the accumulation width).  The wire format is a
+    ``compressors.dither_spec`` realized by the collective quantizer
+    ``compressors.shared_scale_levels``, and the idealized per-worker
+    payload is reported per step via ``compressors.spec_bits``
+    (``metrics["uplink_mbits"]``).
   * shifts h^i: one bf16 pytree per worker (lives sharded over data —
     each worker's shift is its own slice; realized as per-device state
     inside shard_map).
@@ -32,6 +36,8 @@ import numpy as np
 
 from repro.compat import axis_size, shard_map
 from repro.configs.base import ModelConfig
+from repro.core.compressors import (dither_spec, identity_spec,
+                                    shared_scale_levels, spec_bits)
 from repro.models.context import ModelContext
 from repro.train.step import _loss_fn
 
@@ -52,19 +58,6 @@ class FlecsDLConfig:
                                    # at lr=α while the sketched subspace gets
                                    # curvature-scaled steps
     compress: bool = True          # False = uncompressed DP baseline
-
-
-def _shared_scale_quantize(key, x, s, axes):
-    """int8 dithering with a pmax-shared scale (sum-compatible across
-    workers).  Returns (levels int8, scale f32 scalar)."""
-    xf = x.astype(jnp.float32)
-    norm = jax.lax.pmax(jnp.max(jnp.abs(xf)), axes)
-    norm = jnp.where(norm == 0, 1.0, norm)
-    y = xf / norm * s
-    lo = jnp.floor(y)
-    u = jax.random.uniform(key, x.shape)
-    levels = (lo + (u < (y - lo))).astype(jnp.int8)
-    return levels, norm / s
 
 
 def _tensor_sketch(step, idx, shape, m):
@@ -134,6 +127,11 @@ def make_flecs_train_step(cfg: ModelConfig, ctx: ModelContext,
         n = 1
         for a in axes:
             n *= axis_size(a)
+        # the wire-format spec of the compressed collective: int8 random
+        # dithering, levels capped so n workers' level sums stay exact in
+        # the f16 psum accumulation below
+        gspec = dither_spec(max(1, min(fcfg.s_levels, 2047 // n)))
+        payload_bits = jnp.float32(0.0)   # idealized uplink (spec_bits)
 
         # --- compressed gradient differences (the CGD contribution) -------
         g_tilde, new_own, new_mean = [], [], []
@@ -143,11 +141,12 @@ def make_flecs_train_step(cfg: ModelConfig, ctx: ModelContext,
                 g_tilde.append(g_avg)
                 new_own.append(ho)
                 new_mean.append(hm)
+                payload_bits += spec_bits(identity_spec(), g.size)
                 continue
             key = jax.random.fold_in(key0, i)
             delta = g.astype(jnp.float32) - ho.astype(jnp.float32)
-            s_lv = max(1, min(fcfg.s_levels, 2047 // n))
-            levels, scale = _shared_scale_quantize(key, delta, s_lv, axis)
+            levels, scale = shared_scale_levels(key, delta, gspec.s, axis)
+            payload_bits += spec_bits(gspec, delta.size)
             # f16 psum: the compressed collective (wire = 2 bytes/elem).
             # f16 holds integers exactly up to 2048, so with s·n < 2048 the
             # sum of n workers' levels is exact; XLA PROMOTES s16 all-reduce
@@ -184,13 +183,14 @@ def make_flecs_train_step(cfg: ModelConfig, ctx: ModelContext,
                     key = jax.random.fold_in(jax.random.fold_in(key0, col),
                                              1000 + i)
                     if fcfg.compress:
-                        s_lv = max(1, min(fcfg.s_levels, 2047 // n))
-                        lv, sc = _shared_scale_quantize(
-                            key, y.astype(jnp.float32), s_lv, axis)
+                        lv, sc = shared_scale_levels(
+                            key, y.astype(jnp.float32), gspec.s, axis)
+                        payload_bits += spec_bits(gspec, y.size)
                         y_bar = (jax.lax.psum(lv.astype(jnp.float16), axis)
                                  .astype(jnp.float32) * sc / n)
                     else:
                         y_bar = jax.lax.pmean(y.astype(jnp.float32), axis)
+                        payload_bits += spec_bits(identity_spec(), y.size)
                     y_cols_all[i].append(y_bar.reshape(-1))
             directions = []
             for i, g in enumerate(jax.tree.leaves(g_tilde)):
@@ -209,7 +209,12 @@ def make_flecs_train_step(cfg: ModelConfig, ctx: ModelContext,
                           + fcfg.alpha * u).astype(p.dtype), params, update)
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
                              for g in jax.tree.leaves(g_tilde)))
-        metrics = {"loss": jax.lax.pmean(loss, axis), "grad_norm": gnorm}
+        # uplink_mbits: the idealized per-worker payload (spec_bits of the
+        # wire spec — what a parameter-server federation would ship); the
+        # ring all-reduce actually carries the 16-bit accumulation width,
+        # a fixed 16/ceil(log2(2s+1)) factor on top
+        metrics = {"loss": jax.lax.pmean(loss, axis), "grad_norm": gnorm,
+                   "uplink_mbits": payload_bits / 1e6}
         return new_params, new_shifts, metrics
 
     def build(params_abs, batch_abs, pshard, bshard):

@@ -20,8 +20,13 @@ site.  This module replaces all of those loops with **one** compiled
   down-casts float trace entries (e.g. bf16 for long sweeps) while bit
   counters stay in :func:`bits_dtype`.
 * :func:`run_sweep` — vmap a whole hyperparameter grid of independent runs
-  (step sizes, dithering levels) over the scan, so a Figure-1-style
+  (step sizes, compressor specs, beta) over the scan, so a Figure-1-style
   comparison grid is a single device program.
+* :func:`run_async_sweep` — the same for the async engine: a (tau,
+  buffer_k) staleness grid shares one max-delay :class:`MessageBuffer`
+  shape and runs as one compiled vmap, with per-point delays traced
+  (:func:`sample_delays`) and the step size optionally auto-damped
+  (:func:`damped_alpha`).
 * :func:`participation_mask` — per-round client-sampling masks (Bernoulli
   or exact-k choice), the partial-participation axis used by
   ``repro.core.flecs`` and ``repro.optim.baselines``.  Workers outside the
@@ -148,6 +153,25 @@ ASYNC_SALT = 0x5A17
 # Staleness: per-worker delay sampling
 # ---------------------------------------------------------------------------
 
+def sample_delays(kind: str, key, n: int, tau, q: float = 0.5) -> jnp.ndarray:
+    """[n] int32 delays in [0, tau]; ``tau`` may be a *traced* scalar, which
+    is what lets ``run_async_sweep`` vmap a (tau, buffer_k) grid through one
+    compiled program.  Trace-safe under jit/vmap/scan; at tau=0 every model
+    degenerates to all-zero delays, so the tau=0 grid point collapses to the
+    synchronous engine regardless of ``kind``."""
+    tau = jnp.asarray(tau, jnp.int32)
+    if kind == "fixed":
+        return jnp.full((n,), tau, jnp.int32)
+    if kind == "uniform":
+        return jax.random.randint(key, (n,), 0, tau + 1, dtype=jnp.int32)
+    if kind == "geometric":
+        # geometric: P(delay >= t) = q^t  <=>  floor(log(u) / log(q))
+        u = jax.random.uniform(key, (n,), minval=jnp.finfo(jnp.float32).tiny)
+        g = jnp.floor(jnp.log(u) / jnp.log(jnp.float32(q)))
+        return jnp.minimum(g.astype(jnp.int32), tau)
+    raise ValueError(f"unknown staleness kind: {kind!r}")
+
+
 @dataclasses.dataclass(frozen=True)
 class StalenessSchedule:
     """Per-worker integer round delays, sampled fresh each round.
@@ -160,7 +184,8 @@ class StalenessSchedule:
                       uncapped delay is q/(1-q) rounds).
 
     ``tau`` bounds the delay in all three models, which bounds the
-    :class:`MessageBuffer` to ``tau + 1`` slots.
+    :class:`MessageBuffer` to ``tau + 1`` slots.  Sampling delegates to
+    :func:`sample_delays`, the traced-tau form the async sweep vmaps over.
     """
     kind: str = "fixed"
     tau: int = 0
@@ -180,15 +205,31 @@ class StalenessSchedule:
 
     def sample(self, key, n: int) -> jnp.ndarray:
         """[n] int32 delays in [0, tau]; trace-safe under jit/vmap/scan."""
-        if self.kind == "fixed" or self.tau == 0:
-            return jnp.full((n,), self.tau, jnp.int32)
-        if self.kind == "uniform":
-            return jax.random.randint(key, (n,), 0, self.tau + 1,
-                                      dtype=jnp.int32)
-        # geometric: P(delay >= t) = q^t  <=>  floor(log(u) / log(q))
-        u = jax.random.uniform(key, (n,), minval=jnp.finfo(jnp.float32).tiny)
-        g = jnp.floor(jnp.log(u) / jnp.log(jnp.float32(self.q)))
-        return jnp.minimum(g.astype(jnp.int32), self.tau)
+        return sample_delays(self.kind, key, n, self.tau, self.q)
+
+
+def damped_alpha(alpha0, sampled_frac, buffer_k, n_workers):
+    """Variance-motivated auto-damped step size for async/buffered runs.
+
+        alpha = alpha0 · min(1, p · K / n)
+
+    Rationale (the PR-2 damped-step study, recorded in ROADMAP): a FedBuff
+    flush averages K single-worker updates drawn from a p-fraction of the
+    federation, so the subset-mean noise entering the server step grows by
+    ~ n/(pK) relative to the synchronous full-participation mean over n
+    workers — and the *preconditioned* update amplifies that noise along
+    low-curvature directions by up to 1/omega_min.  Damping alpha linearly
+    in pK/n (rather than the sqrt CLT rule) keeps alpha² × amplified
+    variance at its full-participation level under that worst-case
+    amplification; empirically it lands in the hand-tuned 0.1–0.2 band
+    (p=0.5, K=n/4 → alpha0/8 = 0.125·alpha0).
+
+    All arguments may be traced (``buffer_k`` typically a [G] grid axis),
+    so the damped alpha is itself a vmappable sweep axis.
+    """
+    scale = (jnp.asarray(sampled_frac, jnp.float32)
+             * jnp.asarray(buffer_k, jnp.float32) / n_workers)
+    return jnp.asarray(alpha0, jnp.float32) * jnp.clip(scale, 0.0, 1.0)
 
 
 # ---------------------------------------------------------------------------
@@ -399,6 +440,44 @@ def run_sweep(sweep_step: Callable, hparams, state, key, iters: int,
         return jax.lax.scan(_thinned(body, record_every), state, kb)
 
     return jax.jit(jax.vmap(one))(hparams, keys)
+
+
+def run_async_sweep(sweep_step: Callable, hparams, state, key, iters: int,
+                    record: Optional[Callable] = None,
+                    record_every: int = 1, trace_dtype=None):
+    """Vmapped async/buffered sweep: a (tau, buffer_k, …) grid as ONE
+    device program.
+
+    sweep_step: (hp, state, key) -> (state, aux), e.g. from
+                ``repro.core.flecs.make_flecs_async_sweep_step`` — the
+                delays and flush threshold are traced per grid point.
+    hparams:    pytree with a leading [G] grid axis carrying a ``tau``
+                leaf (int delays) — e.g. ``flecs.FlecsAsyncHParams`` from
+                ``flecs.async_hparam_grid``.
+    state:      ONE shared initial async state whose ``buf``
+                :class:`MessageBuffer` must have max(tau)+1 slots — every
+                grid point runs in the same buffer shape, with shorter
+                delays simply leaving the later slots unused.  (A per-point
+                buffer shape would make the grid unvmappable.)
+
+    Key streams, record_every and trace_dtype follow :func:`run_sweep`
+    exactly, so grid point g reproduces the standalone async run with key
+    ``split(key, G)[g]`` bit-for-bit — including the tau=0 point, which
+    collapses to the synchronous engine.
+    """
+    taus = getattr(hparams, "tau", None)
+    if taus is not None:
+        buf = getattr(state, "buf", None)
+        if buf is not None:
+            slots = buf.occupied.shape[0]
+            tau_max = int(jnp.max(taus))
+            if tau_max + 1 > slots:
+                raise ValueError(
+                    f"shared MessageBuffer has {slots} slot(s) but the grid "
+                    f"reaches tau={tau_max}; init the async state with "
+                    f"max_delay >= {tau_max}")
+    return run_sweep(sweep_step, hparams, state, key, iters, record=record,
+                     record_every=record_every, trace_dtype=trace_dtype)
 
 
 def iters_for_bit_budget(budget: float, bits_per_round: float) -> int:

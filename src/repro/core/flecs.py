@@ -2,7 +2,7 @@
 
 This is the paper-faithful reproduction used to validate against the paper's
 own experiments (regularized logistic regression, LIBSVM-dim synthetic
-shards).  One `FlecsState` + `flecs_step` pair implements BOTH:
+shards).  One `FlecsState` + step pair implements BOTH:
 
   * FLECS      — gradient compressor = identity (the paper's baseline)
   * FLECS-CGD  — gradient compressor = random dithering (+ shift h update)
@@ -15,54 +15,69 @@ Everything is jit-compatible; worker loops are vmapped (the n workers of a
 federation are a batch dim here) and whole experiments run under
 ``repro.core.driver.run_experiment`` (lax.scan — no Python step loops).
 
+Traced hyperparameters — ONE code path for static runs and sweeps
+------------------------------------------------------------------
+Every per-round knob lives in :class:`FlecsHParams` (step sizes alpha/gamma,
+direct-update beta, and full ``CompressorSpec``s for the gradient AND
+Hessian compressors — see ``repro.core.compressors``).  ``_flecs_round``
+consumes the hparams as traced values, so:
+
+  * ``make_flecs_step(cfg, …)`` is a *specialization* of
+    ``make_flecs_sweep_step`` at the concrete ``hparams_from_config(cfg)``
+    point — there is no parallel static round implementation to drift;
+  * ``driver.run_sweep`` vmaps a whole (alpha × gamma × beta × grad_s ×
+    hess_s) grid through one compiled program, with exact per-point bit
+    ledgers (``compressors.spec_bits`` is traced too).
+
+The async engine gets the same treatment: :class:`FlecsAsyncHParams` adds
+traced ``tau`` (delay) and ``buffer_k`` (FedBuff flush threshold) axes, and
+``make_flecs_async_step`` specializes ``make_flecs_async_sweep_step`` so a
+(tau × buffer_k) staleness grid runs under ``driver.run_async_sweep`` as
+one program sharing a max-delay ``MessageBuffer`` shape.
+
 Partial participation (beyond-paper axis, FedNL/FedLab-style): set
 ``FlecsConfig.participation < 1`` and each round draws a client mask via
 ``driver.participation_mask``.  Only sampled workers contribute to the
 server aggregates (g̃, Ỹ, M̄, B̄), update their shift h^i / approximation
 B^i, and pay communication bits; skipped workers are charged zero bits.
 
-Asynchronous buffered aggregation (beyond-paper axis, FedBuff-style): see
-``make_flecs_async_step`` — a sampled worker's message (c_k^i, Ỹ_k^i,
-M_k^i) arrives ``tau`` rounds after it was computed (delays drawn from a
-``driver.StalenessSchedule``), buffers FedBuff-style on the server, and is
-applied once ``buffer_k`` updates have accumulated.  The worker's shift
-h^i and approximation B^i are updated — and its bits charged — at the
-*arrival* round; a worker with a message in flight is busy and is not
-sampled again, which keeps the shift algebra exact (every c^i is
-reconstructed against the same h^i it was compressed against).  With
-``tau=0`` (and ``buffer_k=n`` at full participation, or ``buffer_k=1``
-under sampling) the async step reproduces the synchronous one trace-for-
-trace (tests/test_async_aggregation.py).
+Asynchronous buffered aggregation (beyond-paper axis, FedBuff-style): a
+sampled worker's message (c_k^i, Ỹ_k^i, M_k^i) arrives ``tau`` rounds
+after it was computed (delays from ``driver.sample_delays``), buffers
+FedBuff-style on the server, and is applied once ``buffer_k`` updates have
+accumulated.  The worker's shift h^i and approximation B^i are updated —
+and its bits charged — at the *arrival* round; a worker with a message in
+flight is busy and is not sampled again, which keeps the shift algebra
+exact (every c^i is reconstructed against the same h^i it was compressed
+against).  With ``tau=0`` (and ``buffer_k=n`` at full participation, or
+``buffer_k=1`` under sampling) the async step reproduces the synchronous
+one trace-for-trace (tests/test_async_aggregation.py).
 
 Communication accounting (per *participating* worker per iteration, bits;
 ``FlecsState.bits_per_node`` is a per-worker [n] vector):
-  c_k^i : d values   x c bits        (gradient difference, compressed)
-  C_k^i : d·m values x c bits        (sketched-Hessian difference, compressed)
+  c_k^i : spec_bits(grad_spec, d)     (gradient difference, compressed)
+  C_k^i : spec_bits(hess_spec, d·m)   (sketched-Hessian difference)
   M_k^i : m² float32
-  FLECS sends the gradient uncompressed: d x 32 instead of d x c.
-
-Hyperparameter sweeps: ``make_flecs_sweep_step`` builds a step whose step
-sizes and gradient dithering level are *traced* (``FlecsHParams``), so
-``driver.run_sweep`` can vmap a whole grid through one compiled program.
+  FLECS sends the gradient uncompressed: spec_bits(identity, d) = 32·d.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import (Compressor, dither, dither_bits,
-                                    get_compressor)
+from repro.core.compressors import (CompressorSpec, compress, dither_spec,
+                                    spec_bits, spec_from_name)
 from repro.core.directions import (fedsonia_direction,
                                    truncated_inverse_direction,
                                    truncated_inverse_direction_floored)
 from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
                                applied_staleness, bits_dtype, buffer_busy,
-                               buffer_receive, buffer_send,
+                               buffer_receive, buffer_send, damped_alpha,
                                fedbuff_accumulate, init_buffer, masked_mean,
-                               participation_mask)
+                               participation_mask, sample_delays)
 from repro.core.sketch import sketch
 from repro.core.updates import direct_update, truncated_lsr1_update
 
@@ -92,25 +107,57 @@ class FlecsConfig:
 
 
 class FlecsHParams(NamedTuple):
-    """Traced hyperparameters for vmapped sweeps (see ``run_sweep``).
+    """Traced per-round hyperparameters (see ``driver.run_sweep``).
 
-    All fields are float scalars (or [G] arrays across a grid axis):
-      alpha  — iterate step size
-      gamma  — shift learning rate
-      grad_s — gradient dithering level count s (bits = ceil(log2(2s+1)))
+    All fields are scalars — or [G] arrays across a sweep-grid axis:
+      alpha     — iterate step size
+      gamma     — shift learning rate
+      beta      — direct-update (Alg 3) learning rate
+      grad_spec — gradient CompressorSpec (family + level/fraction, traced)
+      hess_spec — Hessian-difference CompressorSpec
     """
     alpha: jnp.ndarray
     gamma: jnp.ndarray
-    grad_s: jnp.ndarray
+    beta: jnp.ndarray
+    grad_spec: CompressorSpec
+    hess_spec: CompressorSpec
+
+    @property
+    def grad_s(self):
+        """Gradient dithering level axis (the pre-spec sweep API)."""
+        return self.grad_spec.s
+
+    @property
+    def hess_s(self):
+        return self.hess_spec.s
 
 
-def hparam_grid(alphas, gammas, grad_levels) -> FlecsHParams:
-    """Cartesian product of the three sweep axes, flattened to [G] arrays."""
-    a, g, s = jnp.meshgrid(jnp.asarray(alphas, jnp.float32),
-                           jnp.asarray(gammas, jnp.float32),
-                           jnp.asarray(grad_levels, jnp.float32),
-                           indexing="ij")
-    return FlecsHParams(a.ravel(), g.ravel(), s.ravel())
+def hparams_from_config(cfg: FlecsConfig) -> FlecsHParams:
+    """The concrete hparams point a static ``make_flecs_step(cfg)`` run
+    specializes the sweep step at."""
+    return FlecsHParams(jnp.float32(cfg.alpha), jnp.float32(cfg.gamma),
+                        jnp.float32(cfg.beta),
+                        spec_from_name(cfg.grad_compressor),
+                        spec_from_name(cfg.hess_compressor))
+
+
+def hparam_grid(alphas, gammas, grad_levels, betas=(1.0,),
+                hess_levels=(64.0,)) -> FlecsHParams:
+    """Cartesian product of the sweep axes, flattened to [G] leaves.
+
+    ``grad_levels``/``hess_levels`` build dithering specs (the paper's
+    experimental compressor); grids over other families — or mixing
+    families along an axis — can be built directly as a ``FlecsHParams``
+    of stacked ``CompressorSpec`` leaves.
+    """
+    a, g, s, b, hs = jnp.meshgrid(jnp.asarray(alphas, jnp.float32),
+                                  jnp.asarray(gammas, jnp.float32),
+                                  jnp.asarray(grad_levels, jnp.float32),
+                                  jnp.asarray(betas, jnp.float32),
+                                  jnp.asarray(hess_levels, jnp.float32),
+                                  indexing="ij")
+    return FlecsHParams(a.ravel(), g.ravel(), b.ravel(),
+                        dither_spec(s.ravel()), dither_spec(hs.ravel()))
 
 
 class FlecsState(NamedTuple):
@@ -132,16 +179,22 @@ def init_state(w0: jnp.ndarray, n_workers: int) -> FlecsState:
     )
 
 
+def _round_bits(grad_spec: CompressorSpec, hess_spec: CompressorSpec,
+                d: int, m: int):
+    """Per-participating-worker uplink bits of one round (traced)."""
+    return (spec_bits(grad_spec, d)              # c_k^i
+            + spec_bits(hess_spec, d * m)        # C_k^i (dim-aware top-k)
+            + 32.0 * m * m)                      # M_k^i (float32)
+
+
 def bits_per_round(cfg: FlecsConfig, d: int) -> float:
     """Deterministic per-participating-worker uplink bits of one round."""
-    Q = get_compressor(cfg.grad_compressor)
-    C = get_compressor(cfg.hess_compressor)
-    return (d * Q.bits_per_value + d * cfg.m * C.bits_per_value
-            + cfg.m * cfg.m * 32.0)
+    return float(_round_bits(spec_from_name(cfg.grad_compressor),
+                             spec_from_name(cfg.hess_compressor), d, cfg.m))
 
 
 def _worker_messages(local_grad: Callable, local_hvp: Callable,
-                     q_compress: Callable, hess_C: Compressor,
+                     grad_spec: CompressorSpec, hess_spec: CompressorSpec,
                      w, h, B, S, k_g, k_h, k_q, k_c):
     """Worker compute phase of Algorithm 1, vmapped over the federation.
 
@@ -149,7 +202,7 @@ def _worker_messages(local_grad: Callable, local_hvp: Callable,
     the current iterate ``w`` against the current shifts/approximations —
     shared verbatim by the synchronous round and the async (buffered) step,
     so the two consume identical key streams and are trace-equivalent at
-    zero delay.
+    zero delay.  The compressor specs may be traced (sweep axes).
     """
     n = h.shape[0]
 
@@ -157,9 +210,9 @@ def _worker_messages(local_grad: Callable, local_hvp: Callable,
         g = local_grad(w, i, jax.random.fold_in(k_g, i))
         Y = local_hvp(w, S, i, jax.random.fold_in(k_h, i))
         M = S.T @ Y                                     # m x m (exact)
-        c = q_compress(kq, g - hk)                      # compressed grad diff
+        c = compress(grad_spec, kq, g - hk)             # compressed grad diff
         BS = Bk @ S
-        Cm = hess_C.compress(kc, Y - BS)                # compressed hess diff
+        Cm = compress(hess_spec, kc, Y - BS)            # compressed hess diff
         return c, M, Cm, BS
 
     ks_q = jax.random.split(k_q, n)
@@ -180,14 +233,28 @@ def _direction(cfg: FlecsConfig, g_tilde, Y_tilde, M_bar, B_bar):
                               cfg.Omega, cfg.rho_val)
 
 
+def _update_B(cfg: FlecsConfig, beta, B, Y_tilde_i, M_all, S_of_t, t):
+    """Per-worker Hessian-approximation update (Alg 2 / Alg 3), shared by
+    the synchronous round and the async arrival path.  ``beta`` may be
+    traced; ``S_of_t(t_i)`` regenerates each message's compute-time sketch
+    (the L-SR1 path needs it; synchronous rounds pass the current sketch)."""
+    if cfg.hessian_update == "direct":
+        return jax.vmap(
+            lambda Bk, Y, M: direct_update(Bk, Y, M, beta))(
+                B, Y_tilde_i, M_all)
+    return jax.vmap(
+        lambda Bk, Y, M, ti: truncated_lsr1_update(
+            Bk, Y, M, S_of_t(ti), cfg.omega)[0])(
+                B, Y_tilde_i, M_all, t)
+
+
 def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
-                 q_compress: Callable, q_bits, hess_C: Compressor,
-                 state: FlecsState, key, alpha, gamma):
+                 hp: FlecsHParams, state: FlecsState, key):
     """One round of Algorithm 1 with client sampling.
 
-    q_compress/q_bits and alpha/gamma may be traced (sweep path) or
-    Python/static (plain ``make_flecs_step`` path); everything else comes
-    from cfg.
+    Every ``hp`` field may be traced (sweep path) or concrete (the static
+    ``make_flecs_step`` specialization); structural choices (m, Hessian
+    update rule, direction, sampling kind) stay static from cfg.
     """
     n, d = state.h.shape
     m = cfg.m
@@ -197,22 +264,15 @@ def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
     mask = participation_mask(k_p, n, cfg.participation, cfg.sampling)  # [n]
 
     c_all, M_all, C_all, BS_all = _worker_messages(
-        local_grad, local_hvp, q_compress, hess_C,
+        local_grad, local_hvp, hp.grad_spec, hp.hess_spec,
         state.w, state.h, state.B, S, k_g, k_h, k_q, k_c)
 
     # --- server -----------------------------------------------------------
     g_tilde_i = c_all + state.h                          # [n, d]
     Y_tilde_i = C_all + BS_all                           # [n, d, m]
 
-    if cfg.hessian_update == "direct":
-        B_upd = jax.vmap(
-            lambda B, Y, M: direct_update(B, Y, M, cfg.beta))(
-                state.B, Y_tilde_i, M_all)
-    else:
-        B_upd = jax.vmap(
-            lambda B, Y, M: truncated_lsr1_update(B, Y, M, S,
-                                                  cfg.omega)[0])(
-                state.B, Y_tilde_i, M_all)
+    B_upd = _update_B(cfg, hp.beta, state.B, Y_tilde_i, M_all,
+                      lambda ti: S, jnp.zeros((n,), jnp.float32))
     # only sampled workers communicated a Hessian difference this round
     B_new = jnp.where(mask[:, None, None] > 0, B_upd, state.B)
 
@@ -222,12 +282,10 @@ def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
     B_bar = masked_mean(B_new, mask)
 
     p = _direction(cfg, g_tilde, Y_tilde, M_bar, B_bar)
-    w_new = state.w + alpha * p
-    h_new = state.h + gamma * mask[:, None] * c_all
+    w_new = state.w + hp.alpha * p
+    h_new = state.h + hp.gamma * mask[:, None] * c_all
 
-    round_bits = (d * q_bits                    # c_k^i
-                  + d * m * hess_C.bits_per_value   # C_k^i
-                  + m * m * 32.0)                   # M_k^i (float32)
+    round_bits = _round_bits(hp.grad_spec, hp.hess_spec, d, m)
     bits_new = (state.bits_per_node
                 + mask.astype(state.bits_per_node.dtype) * round_bits)
     new_state = FlecsState(w_new, h_new, B_new, state.k + 1, bits_new)
@@ -238,17 +296,29 @@ def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
     return new_state, aux
 
 
+def make_flecs_sweep_step(cfg: FlecsConfig, local_grad: Callable,
+                          local_hvp: Callable):
+    """Build step(hp: FlecsHParams, state, key) -> (state, aux) whose step
+    sizes, beta, and BOTH compressor specs are traced, for
+    ``driver.run_sweep`` — the single round implementation every other step
+    maker specializes."""
+    def step(hp: FlecsHParams, state: FlecsState, key) -> tuple:
+        return _flecs_round(cfg, local_grad, local_hvp, hp, state, key)
+
+    return step
+
+
 def make_flecs_step(cfg: FlecsConfig,
                     local_grad: Callable,      # (w, worker_id, key) -> g
                     local_hvp: Callable):      # (w, V[d,m], worker_id, key) -> HV
-    """Build a jit/scan-able step(state, key) -> (state, aux)."""
-    Q = get_compressor(cfg.grad_compressor)
-    C = get_compressor(cfg.hess_compressor)
+    """Build a jit/scan-able step(state, key) -> (state, aux): the sweep
+    step specialized at ``hparams_from_config(cfg)`` — identical ops and
+    key stream, so a sweep grid point reproduces the static run exactly."""
+    hp = hparams_from_config(cfg)
+    sweep = make_flecs_sweep_step(cfg, local_grad, local_hvp)
 
     def step(state: FlecsState, key) -> tuple:
-        return _flecs_round(cfg, local_grad, local_hvp, Q.compress,
-                            Q.bits_per_value, C, state, key,
-                            cfg.alpha, cfg.gamma)
+        return sweep(hp, state, key)
 
     return step
 
@@ -256,6 +326,58 @@ def make_flecs_step(cfg: FlecsConfig,
 # ---------------------------------------------------------------------------
 # Asynchronous buffered aggregation (FedBuff-style staleness)
 # ---------------------------------------------------------------------------
+
+class FlecsAsyncHParams(NamedTuple):
+    """Async sweep point: the synchronous hparams plus the staleness axes.
+
+      hp       — FlecsHParams (alpha possibly auto-damped; see
+                 ``driver.damped_alpha``)
+      tau      — int32 delay-model bound (fixed delay / uniform-geometric
+                 cap), traced per grid point
+      buffer_k — float32 FedBuff flush threshold, traced per grid point
+    """
+    hp: FlecsHParams
+    tau: jnp.ndarray
+    buffer_k: jnp.ndarray
+
+
+def async_hparams_from_config(cfg: FlecsConfig, tau: int,
+                              buffer_k) -> FlecsAsyncHParams:
+    return FlecsAsyncHParams(hparams_from_config(cfg), jnp.int32(tau),
+                             jnp.float32(buffer_k))
+
+
+def async_hparam_grid(taus, buffer_ks, *, alpha=1.0, gamma=1.0, beta=1.0,
+                      grad_s=64.0, hess_s=64.0,
+                      auto_damp=None) -> FlecsAsyncHParams:
+    """Cartesian (tau × buffer_k) staleness grid, flattened to [G] leaves.
+
+    auto_damp: optional ``(sampled_frac, n_workers)`` — per-point alpha
+    becomes ``driver.damped_alpha(alpha, sampled_frac, K_eff, n_workers)``,
+    so the grid stops needing hand-tuned async step sizes.  The damping
+    count is the number of updates a flush actually averages: at tau=0 the
+    whole sampled cohort (round(p·n) messages) lands at once, so a flush
+    can never average fewer than that and K_eff = max(K, round(p·n)) —
+    matching the synchronous engine the tau=0 point collapses to; delayed
+    points trickle arrivals (busy-exclusion staggers the cohort) and keep
+    K_eff = K.
+    """
+    t, K = jnp.meshgrid(jnp.asarray(taus, jnp.int32),
+                        jnp.asarray(buffer_ks, jnp.float32), indexing="ij")
+    t, K = t.ravel(), K.ravel()
+    G = t.shape[0]
+    if auto_damp is not None:
+        frac, n_workers = auto_damp
+        cohort = jnp.float32(max(1, round(frac * n_workers)))
+        K_eff = jnp.where(t == 0, jnp.maximum(K, cohort), K)
+        alphas = damped_alpha(alpha, frac, K_eff, n_workers)
+    else:
+        alphas = jnp.full((G,), alpha, jnp.float32)
+    full = lambda v: jnp.full((G,), v, jnp.float32)     # noqa: E731
+    hp = FlecsHParams(alphas, full(gamma), full(beta),
+                      dither_spec(full(grad_s)), dither_spec(full(hess_s)))
+    return FlecsAsyncHParams(hp, t, K)
+
 
 class FlecsAsyncState(NamedTuple):
     """Synchronous server state + the in-flight/aggregation buffers.
@@ -294,29 +416,32 @@ def init_async_state(w0: jnp.ndarray, n_workers: int, m: int,
         jnp.zeros((), jnp.float32))
 
 
-def make_flecs_async_step(cfg: FlecsConfig, local_grad: Callable,
-                          local_hvp: Callable,
-                          schedule: StalenessSchedule, buffer_k: int):
-    """Build a scan-able async step(state, key) -> (state, aux).
+def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
+                                local_hvp: Callable,
+                                delay_kind: str = "fixed", q: float = 0.5):
+    """Build step(ahp: FlecsAsyncHParams, state, key) -> (state, aux) whose
+    delay bound tau, flush threshold buffer_k, step sizes, beta, and
+    compressor specs are ALL traced — ``driver.run_async_sweep`` vmaps a
+    whole staleness grid through one compiled program.  Grid points share
+    the state's max-delay ``MessageBuffer`` shape; a point's own (smaller)
+    tau simply leaves the later slots unused.
 
     Per round: (1) sample clients, excluding busy workers (message still in
     flight); (2) sampled workers compute (c, Ỹ, M) at the *current* iterate
     exactly as the synchronous round; (3) messages are filed under arrival
-    round ``k + delay`` (delays from ``schedule``); (4) this round's
-    arrivals update their shift h^i / approximation B^i, are charged bits,
-    and join the FedBuff buffer; (5) once ``buffer_k`` updates have
-    buffered, the server takes one aggregate step from the buffered means
-    and resets the buffer.
+    round ``k + delay`` (delays from ``driver.sample_delays`` at the traced
+    tau); (4) this round's arrivals update their shift h^i / approximation
+    B^i, are charged bits, and join the FedBuff buffer; (5) once
+    ``buffer_k`` updates have buffered, the server takes one aggregate step
+    from the buffered means and resets the buffer.
 
     Stale-curvature note: FedSONIA consumes Ỹ/M̄ means over messages from
     *different* compute rounds (different sketches S_t) — exactly the
     staleness a real async federation sees.  The L-SR1 path regenerates
     each message's compute-time sketch from its buffered round stamp.
     """
-    Q = get_compressor(cfg.grad_compressor)
-    C = get_compressor(cfg.hess_compressor)
-
-    def step(state: FlecsAsyncState, key):
+    def step(ahp: FlecsAsyncHParams, state: FlecsAsyncState, key):
+        hp = ahp.hp
         n, d = state.h.shape
         m = cfg.m
         S = sketch(cfg.sketch_kind, d, m, state.k)
@@ -331,7 +456,7 @@ def make_flecs_async_step(cfg: FlecsConfig, local_grad: Callable,
         # entirely on those rounds — the results would be all-masked anyway
         def compute(_):
             return _worker_messages(
-                local_grad, local_hvp, Q.compress, C,
+                local_grad, local_hvp, hp.grad_spec, hp.hess_spec,
                 state.w, state.h, state.B, S, k_g, k_h, k_q, k_c)
 
         c_all, M_all, C_all, BS_all = jax.lax.cond(
@@ -343,30 +468,23 @@ def make_flecs_async_step(cfg: FlecsConfig, local_grad: Callable,
         msgs = {"c": c_all, "Y": C_all + BS_all, "M": M_all,
                 "t": jnp.full((n,), state.k, jnp.float32)}
 
-        delays = schedule.sample(k_tau, n)
+        delays = sample_delays(delay_kind, k_tau, n, ahp.tau, q)
         buf = buffer_send(state.buf, msgs, send_mask, delays, state.k)
         buf, msg, arrived = buffer_receive(buf, state.k)
 
         # --- arrivals: per-worker server state, bits at the arrival round
         def update_B(_):
-            if cfg.hessian_update == "direct":
-                upd = jax.vmap(
-                    lambda B, Y, M: direct_update(B, Y, M, cfg.beta))(
-                        state.B, msg["Y"], msg["M"])
-            else:
-                upd = jax.vmap(
-                    lambda B, Y, M, t: truncated_lsr1_update(
-                        B, Y, M, sketch(cfg.sketch_kind, d, m,
-                                        t.astype(jnp.int32)), cfg.omega)[0])(
-                            state.B, msg["Y"], msg["M"], msg["t"])
+            upd = _update_B(
+                cfg, hp.beta, state.B, msg["Y"], msg["M"],
+                lambda ti: sketch(cfg.sketch_kind, d, m,
+                                  ti.astype(jnp.int32)), msg["t"])
             return jnp.where(arrived[:, None, None] > 0, upd, state.B)
 
         B_new = jax.lax.cond(jnp.any(arrived > 0), update_B,
                              lambda _: state.B, None)
-        h_new = state.h + cfg.gamma * arrived[:, None] * msg["c"]
+        h_new = state.h + hp.gamma * arrived[:, None] * msg["c"]
 
-        round_bits = (d * Q.bits_per_value + d * m * C.bits_per_value
-                      + m * m * 32.0)
+        round_bits = _round_bits(hp.grad_spec, hp.hess_spec, d, m)
         bits_new = (state.bits_per_node
                     + arrived.astype(state.bits_per_node.dtype) * round_bits)
 
@@ -375,14 +493,14 @@ def make_flecs_async_step(cfg: FlecsConfig, local_grad: Callable,
             {"g": state.acc_g, "Y": state.acc_Y, "M": state.acc_M,
              "B": state.acc_B}, state.acc_n,
             {"g": msg["c"] + state.h, "Y": msg["Y"], "M": msg["M"],
-             "B": B_new}, arrived, buffer_k)
+             "B": B_new}, arrived, ahp.buffer_k)
 
         # lax.cond so the O(d^3) direction computation runs only on flush
         # rounds (a tau-round buffered run flushes every ~tau+1 rounds)
         def flush_step(_):
             p = _direction(cfg, means["g"], means["Y"], means["M"],
                            means["B"])
-            return state.w + cfg.alpha * p, jnp.linalg.norm(p)
+            return state.w + hp.alpha * p, jnp.linalg.norm(p)
 
         w_new, dir_norm = jax.lax.cond(
             flush, flush_step,
@@ -406,21 +524,18 @@ def make_flecs_async_step(cfg: FlecsConfig, local_grad: Callable,
     return step
 
 
-def make_flecs_sweep_step(cfg: FlecsConfig, local_grad: Callable,
-                          local_hvp: Callable):
-    """Build step(hp: FlecsHParams, state, key) -> (state, aux) whose step
-    sizes and gradient dithering level are traced, for ``driver.run_sweep``.
+def make_flecs_async_step(cfg: FlecsConfig, local_grad: Callable,
+                          local_hvp: Callable,
+                          schedule: StalenessSchedule, buffer_k: int):
+    """Build a scan-able async step(state, key) -> (state, aux): the async
+    sweep step specialized at the concrete (cfg, schedule.tau, buffer_k)
+    point — one implementation for static runs and staleness grids."""
+    ahp = async_hparams_from_config(cfg, schedule.tau, buffer_k)
+    sweep = make_flecs_async_sweep_step(cfg, local_grad, local_hvp,
+                                        delay_kind=schedule.kind,
+                                        q=schedule.q)
 
-    The gradient compressor is always dynamic random dithering at
-    ``hp.grad_s`` levels (``cfg.grad_compressor`` is ignored on this path);
-    the Hessian compressor and everything else stay static from cfg.
-    """
-    C = get_compressor(cfg.hess_compressor)
-
-    def step(hp: FlecsHParams, state: FlecsState, key) -> tuple:
-        return _flecs_round(
-            cfg, local_grad, local_hvp,
-            lambda k, x: dither(k, x, hp.grad_s), dither_bits(hp.grad_s),
-            C, state, key, hp.alpha, hp.gamma)
+    def step(state: FlecsAsyncState, key):
+        return sweep(ahp, state, key)
 
     return step

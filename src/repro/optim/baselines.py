@@ -26,6 +26,14 @@ delays from a ``driver.StalenessSchedule``, a bounded in-flight
 have buffered.  At ``tau=0`` (with ``buffer_k=1``, or ``buffer_k=n`` under
 full participation) they collapse to the synchronous steps trace-for-trace,
 so delay ablations compare methods on one engine.
+
+Spec-based compression: every ``compressor`` argument accepts a registry
+name, a ``Compressor``, or a (possibly traced) ``CompressorSpec`` — the
+steps apply ``compressors.compress(spec, …)`` and charge
+``compressors.spec_bits(spec, d)``, the same traced algebra FLECS uses, so
+the compressor choice is a vmappable sweep axis here too and FedNL's top-k
+Hessian differences get the dimension-aware (32 + ⌈log2 d²⌉)-bits-per-kept-
+value wire accounting.
 """
 from __future__ import annotations
 
@@ -35,7 +43,7 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import get_compressor
+from repro.core.compressors import as_spec, compress, spec_bits
 from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
                                applied_staleness, bits_dtype, buffer_busy,
                                buffer_receive, buffer_send,
@@ -50,10 +58,10 @@ class DianaState(NamedTuple):
     bits_per_node: jnp.ndarray   # [n]
 
 
-def make_diana_step(alpha: float, gamma: float, compressor: str,
+def make_diana_step(alpha: float, gamma: float, compressor,
                     local_grad: Callable, participation: float = 1.0,
                     sampling: str = "bernoulli"):
-    Q = get_compressor(compressor)
+    spec = as_spec(compressor)
 
     def step(state: DianaState, key):
         n, d = state.h.shape
@@ -62,7 +70,7 @@ def make_diana_step(alpha: float, gamma: float, compressor: str,
 
         def worker(i, hk, kq):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
-            return Q.compress(kq, g - hk)
+            return compress(spec, kq, g - hk)
 
         ks = jax.random.split(k_q, n)
         c = jax.vmap(worker)(jnp.arange(n), state.h, ks)
@@ -70,7 +78,7 @@ def make_diana_step(alpha: float, gamma: float, compressor: str,
         w = state.w - alpha * g_tilde
         h = state.h + gamma * mask[:, None] * c
         bits = state.bits_per_node + mask.astype(
-            state.bits_per_node.dtype) * (d * Q.bits_per_value)
+            state.bits_per_node.dtype) * spec_bits(spec, d)
         new = DianaState(w, h, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
                      "n_active": jnp.sum(mask),
@@ -107,7 +115,7 @@ def init_diana_async(w0, n_workers, max_delay: int) -> DianaAsyncState:
                            jnp.zeros((), jnp.float32))
 
 
-def make_diana_async_step(alpha: float, gamma: float, compressor: str,
+def make_diana_async_step(alpha: float, gamma: float, compressor,
                           local_grad: Callable,
                           schedule: StalenessSchedule, buffer_k: int,
                           participation: float = 1.0,
@@ -117,7 +125,7 @@ def make_diana_async_step(alpha: float, gamma: float, compressor: str,
     arrival round, shifts h^i update on arrival (busy workers are not
     re-sampled, so each c^i reconstructs against its compute-time shift),
     and the server steps once ``buffer_k`` updates have buffered."""
-    Q = get_compressor(compressor)
+    spec = as_spec(compressor)
 
     def step(state: DianaAsyncState, key):
         n, d = state.h.shape
@@ -128,7 +136,7 @@ def make_diana_async_step(alpha: float, gamma: float, compressor: str,
 
         def worker(i, hk, kq):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
-            return Q.compress(kq, g - hk)
+            return compress(spec, kq, g - hk)
 
         # skip the n gradient evaluations on rounds where everyone is busy
         c = jax.lax.cond(
@@ -143,7 +151,7 @@ def make_diana_async_step(alpha: float, gamma: float, compressor: str,
 
         h = state.h + gamma * arrived[:, None] * msg["c"]
         bits = state.bits_per_node + arrived.astype(
-            state.bits_per_node.dtype) * (d * Q.bits_per_value)
+            state.bits_per_node.dtype) * spec_bits(spec, d)
         acc_g, acc_n, g_tilde, flush, reset = fedbuff_accumulate(
             state.acc_g, state.acc_n, msg["c"] + state.h, arrived, buffer_k)
 
@@ -169,12 +177,12 @@ class FedNLState(NamedTuple):
     bits_per_node: jnp.ndarray   # [n]
 
 
-def make_fednl_step(alpha: float, compressor: str, local_grad: Callable,
+def make_fednl_step(alpha: float, compressor, local_grad: Callable,
                     local_hessian: Callable, mu: float,
                     participation: float = 1.0, sampling: str = "bernoulli"):
     """FedNL (option with projection/regularized direction):
     H^i_{k+1} = H^i_k + C(∇²f_i(w_k) - H^i_k);  w⁺ = w - α [H̄]_μ^{-1} ḡ."""
-    C = get_compressor(compressor)
+    spec = as_spec(compressor)
 
     def step(state: FedNLState, key):
         n, d = state.H.shape[:2]
@@ -184,7 +192,7 @@ def make_fednl_step(alpha: float, compressor: str, local_grad: Callable,
         def worker(i, Hk, kc):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
             Hi = local_hessian(state.w, i)
-            D = C.compress(kc, Hi - Hk)
+            D = compress(spec, kc, Hi - Hk)
             return g, D
 
         ks = jax.random.split(k_c, n)
@@ -198,9 +206,9 @@ def make_fednl_step(alpha: float, compressor: str, local_grad: Callable,
         lam = jnp.maximum(jnp.abs(lam), mu)
         p = -(V @ ((V.T @ g_bar) / lam))
         w = state.w + alpha * p
+        # uncompressed gradient + dimension-aware compressed Hessian diff
         bits = state.bits_per_node + mask.astype(
-            state.bits_per_node.dtype) * (d * 32.0
-                                          + d * d * C.bits_per_value)
+            state.bits_per_node.dtype) * (d * 32.0 + spec_bits(spec, d * d))
         new = FedNLState(w, H_new, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_bar),
                      "n_active": jnp.sum(mask),

@@ -154,10 +154,14 @@ def test_baseline_bits_respect_participation():
     def local_hessian(w, i):
         return jax.hessian(lambda ww: PROB.local_loss(ww, i))(w)
 
+    # FedNL ships the d² Hessian difference through top-k: ⌈frac·d²⌉ kept
+    # values at (32 + ⌈log2 d²⌉) bits each (dimension-aware index cost)
+    kept = math.ceil(0.25 * D * D)
+    fednl_hess_bits = kept * (32.0 + math.ceil(math.log2(D * D)))
     runs["fednl"] = (
         make_fednl_step(1.0, "topk0.25", LG, local_hessian, PROB.mu,
                         participation=0.5, sampling="choice"),
-        init_fednl(jnp.zeros(D), N), D * 32.0 + D * D * 16.0)
+        init_fednl(jnp.zeros(D), N), D * 32.0 + fednl_hess_bits)
     for name, (step, st0, per_round) in runs.items():
         st, tr = run_experiment(step, st0, jax.random.key(3), 6)
         inc = np.diff(np.concatenate(

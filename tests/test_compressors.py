@@ -15,7 +15,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.compressors import (decode_int8, dither_bits, encode_int8,
                                     get_compressor, identity, natural,
-                                    random_dithering, top_k)
+                                    random_dithering, spec_omega, top_k)
 
 vec = st.lists(st.floats(-100, 100, allow_nan=False, width=32),
                min_size=2, max_size=64).map(
@@ -106,6 +106,54 @@ def test_natural_unbiased(x):
     mean = np.asarray(jnp.mean(qs, axis=0))
     tol = 6.0 * np.maximum(np.abs(x), 1e-3) / np.sqrt(1024) + 1e-5
     assert np.all(np.abs(mean - x) <= tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.01, 100, allow_nan=False, width=16),
+                min_size=1, max_size=48),
+       st.lists(st.integers(1, 8), min_size=1, max_size=3),
+       st.sampled_from([np.float32, np.float16]),
+       st.booleans())
+def test_natural_error_variance_bound(mags, dims, dtype, negate):
+    """Definition 3 membership of natural compression, mirroring the
+    dithering test: unbiased (above) with E‖Q(x) − x‖² ≤ (1/8)‖x‖² over
+    random shapes/dtypes.
+
+    Per coordinate the error variance is p(1−p)·lo² with lo = 2^⌊log2|x|⌋
+    and p = (|x| − lo)/lo, and p(1−p)/(1+p)² ≤ 1/8 (tight at p = 1/3), so
+    the ω = 1/8 bound is checked *deterministically* in closed form; the
+    sampled error only has to agree with the analytic value within
+    statistical tolerance.  Both rounding targets {lo, 2lo} are powers of
+    two, hence exactly representable in f16/f32 — the bound is exact for
+    every dtype in the normal range."""
+    d = int(np.prod(dims))
+    x = np.resize(np.asarray(mags, np.float64), d)
+    x = np.where(negate, -x, x)
+    x = x.astype(dtype)                          # representable values only
+    shaped = jnp.asarray(x.reshape(dims))
+    xf = np.asarray(x, np.float64)
+    nrm2 = float(np.sum(xf ** 2))
+    lo = 2.0 ** np.floor(np.log2(np.abs(xf)))
+    p = np.abs(xf) / lo - 1.0
+    analytic = float(np.sum(p * (1 - p) * lo * lo))
+    assert analytic <= nrm2 / 8.0 * (1 + 1e-6) + 1e-12
+    assert float(spec_omega(natural().spec, d)) == 0.125
+
+    Q = natural()
+    keys = jax.random.split(jax.random.key(7), 512)
+    qs = jax.vmap(lambda k: Q.compress(k, shaped).reshape(-1))(keys)
+    assert qs.dtype == shaped.dtype
+    err = float(jnp.mean(jnp.sum(
+        (qs.astype(jnp.float32) - jnp.asarray(xf, jnp.float32)) ** 2,
+        axis=-1)))
+    # per-coordinate error range is lo ≤ |x|: CLT tolerance on the mean
+    tol = 0.25 * analytic + 6.0 * float(np.max(lo)) ** 2 / np.sqrt(512) + 1e-6
+    assert abs(err - analytic) <= tol
+    # realized error never exceeds the per-draw worst case Σ lo²
+    worst = float(np.sum(lo * lo)) * (1 + 1e-5) + 1e-6
+    assert float(jnp.max(jnp.sum(
+        (qs.astype(jnp.float32) - jnp.asarray(xf, jnp.float32)) ** 2,
+        axis=-1))) <= worst
 
 
 def test_identity_exact(rng):
