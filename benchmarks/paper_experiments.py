@@ -9,12 +9,20 @@ Claim §3    — communication complexity table:
 Comparison  — vs DIANA / FedNL / GD baselines (as the FLECS paper does).
 Beyond-paper — dithering-level ablation, a *vmapped* step-size x level grid
               (one compiled program for the whole grid), a partial-
-              participation ablation (FedNL/FedLab-style client sampling),
+              participation ablation as a TRACED Bernoulli-p sweep axis,
               an async buffered-aggregation grid (FedBuff-style delay x
               participation, bits charged at the arrival round), and the
               full traced-spec ablation grids: (grad_s x hess_s x beta) and
-              auto-damped (tau x buffer_k), each ONE compiled vmapped
-              program (``run_sweep`` / ``run_async_sweep``).
+              auto-damped (tau x buffer_k).
+
+One compiled program per figure: the comparison figures (fig1, baselines,
+participation, ablation grid) are authored as ``repro.core.api``
+``ExperimentPlan``s and lowered by ``run_plan`` to a single jitted
+program each — fig1's old 8 compiles (4 sketch sizes × 2 methods) are now
+ONE, with the FLECS-vs-FLECS-CGD axis a traced compressor-*family* grid
+axis (``compressors.stack_specs``) and the m axis a set of structural
+segments inside the same program.  ``assert_one_compile`` checks the
+invariant at run time via ``api.plan_compiles()``.
 
 Every trajectory is ONE lax.scan program via ``repro.core.driver`` —
 per-iteration metrics are recorded inside the scan, not by re-entering the
@@ -23,10 +31,12 @@ host between rounds.
 Emits CSV rows ``name,us_per_call,derived`` plus human-readable tables;
 raw trajectories land in benchmarks/out/*.json for plotting.
 
-Standalone smoke entry (the CI sweep-smoke job)::
+Standalone smoke entries (the CI sweep-smoke / plan-smoke jobs)::
 
     PYTHONPATH=src python benchmarks/paper_experiments.py \
         --grids-only --d 16 --workers 4 --r 16 --iters 6
+    PYTHONPATH=src python benchmarks/paper_experiments.py \
+        --plans-only --d 16 --workers 4 --r 16 --iters 6
 """
 from __future__ import annotations
 
@@ -38,6 +48,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import api
+from repro.core.api import ExperimentPlan, MethodRun, get_method, run_plan
+from repro.core.compressors import stack_specs
 from repro.core.driver import (StalenessSchedule, run_async_sweep,
                                run_experiment, run_sweep)
 from repro.core.flecs import (FlecsConfig, async_hparam_grid, bits_per_round,
@@ -46,11 +59,30 @@ from repro.core.flecs import (FlecsConfig, async_hparam_grid, bits_per_round,
                               make_flecs_async_sweep_step, make_flecs_step,
                               make_flecs_sweep_step)
 from repro.data.logreg import make_problem
-from repro.optim.baselines import (init_diana, init_fednl, init_gd,
-                                   make_diana_step, make_fednl_step,
-                                   make_gd_step)
+from repro.optim.baselines import DianaConfig, FedNLConfig, GDConfig
 
 OUT = Path(__file__).resolve().parent / "out"
+
+
+def assert_one_compile(run):
+    """Execute ``run()`` (a run_plan call) asserting it compiled exactly
+    one program — the figure-level invariant the redesign exists for."""
+    before = api.plan_compiles()
+    result = run()
+    compiles = api.plan_compiles() - before
+    assert compiles == 1, f"plan compiled {compiles} programs, expected 1"
+    return result
+
+
+def _rows_from_traces(tr, iters, every):
+    """Thin JSON rows from one run's {F, grad_sq, bits_per_node [n]}
+    traces — the single row schema every figure JSON shares."""
+    F = np.asarray(tr["F"])
+    g2 = np.asarray(tr["grad_sq"])
+    bits = np.asarray(tr["bits_per_node"]).max(axis=1)
+    return [{"iter": k, "F": float(F[k]), "grad_sq": float(g2[k]),
+             "bits_per_node": float(bits[k])}
+            for k in range(iters) if k % every == 0 or k == iters - 1]
 
 
 def _trajectory(step, state, prob, iters, seed=0, every=5):
@@ -60,28 +92,49 @@ def _trajectory(step, state, prob, iters, seed=0, every=5):
                                record=lambda st: prob.metrics(st.w))
     jax.block_until_ready(state)
     dt = (time.perf_counter() - t0) / iters * 1e6
-    F = np.asarray(tr["F"])
-    g2 = np.asarray(tr["grad_sq"])
-    bits = np.asarray(tr["bits_per_node"]).max(axis=1)
-    rows = [{"iter": k, "F": float(F[k]), "grad_sq": float(g2[k]),
-             "bits_per_node": float(bits[k])}
-            for k in range(iters) if k % every == 0 or k == iters - 1]
-    return rows, dt
+    return _rows_from_traces(tr, iters, every), dt
 
 
-def fig1_flecs_vs_cgd(prob, iters=300):
-    """Fig 1/2: both methods, m sweep, dithering s=64 (paper's setting)."""
-    lg, lh = prob.make_oracles()
+def _trace_rows(tr, g, iters, every=5):
+    """:func:`_rows_from_traces` for grid point ``g`` of a [G, iters, ...]
+    plan trace."""
+    return _rows_from_traces(jax.tree.map(lambda a: a[g], tr), iters, every)
+
+
+FIG1_MS = (1, 2, 4, 8)
+FIG1_FAMILIES = ("FLECS", "FLECS-CGD")       # grid order of the family axis
+
+
+def fig1_plan(prob, iters=300) -> ExperimentPlan:
+    """Fig 1/2 as ONE ExperimentPlan: the FLECS-vs-FLECS-CGD comparison is
+    a traced compressor-FAMILY grid axis (identity vs dither64) inside each
+    sketch-size segment; the m axis changes array shapes, so each m is a
+    structural segment of the same single compiled program."""
+    fam = stack_specs("identity", "dither64")
+    flecs_m = get_method("flecs_cgd")
+    return ExperimentPlan(
+        problem=prob,
+        runs=tuple(
+            MethodRun("flecs_cgd",
+                      cfg=FlecsConfig(m=m, alpha=1.0, beta=1.0, gamma=1.0,
+                                      hess_compressor="dither64"),
+                      hparams=flecs_m.grid(grad_specs=fam),
+                      label=f"m{m}")
+            for m in FIG1_MS),
+        iters=iters)
+
+
+def fig1_flecs_vs_cgd(prob, iters=300, every=5):
+    """Fig 1/2: both methods, m sweep, dithering s=64 (paper's setting) —
+    8 trajectories, ONE compiled program (was 8 before the plan API)."""
+    res = assert_one_compile(lambda: run_plan(fig1_plan(prob, iters)))
     results = {}
     us = {}
-    for m in (1, 2, 4, 8):
-        for name, gc in (("FLECS", "identity"), ("FLECS-CGD", "dither64")):
-            cfg = FlecsConfig(m=m, alpha=1.0, beta=1.0, gamma=1.0,
-                              grad_compressor=gc, hess_compressor="dither64")
-            step = make_flecs_step(cfg, lg, lh)
-            st = init_state(jnp.zeros(prob.d), prob.n_workers)
-            rows, dt = _trajectory(step, st, prob, iters)
-            results[f"{name}-m{m}"] = rows
+    dt = res.seconds / (iters * len(FIG1_MS) * len(FIG1_FAMILIES)) * 1e6
+    for m in FIG1_MS:
+        tr = res.traces[f"m{m}"]
+        for g, name in enumerate(FIG1_FAMILIES):
+            results[f"{name}-m{m}"] = _trace_rows(tr, g, iters, every)
             us[f"{name}-m{m}"] = dt
     return results, us
 
@@ -131,34 +184,35 @@ def comm_table(prob):
     return rows
 
 
+def baselines_plan(prob, iters=200) -> ExperimentPlan:
+    """The four-method comparison as ONE plan (four structural segments,
+    one compiled program); FedNL keeps its shorter round budget."""
+    return ExperimentPlan(
+        problem=prob,
+        runs=(
+            MethodRun("flecs_cgd",
+                      cfg=FlecsConfig(m=2, grad_compressor="dither64",
+                                      hess_compressor="dither64"),
+                      label="FLECS-CGD"),
+            MethodRun("diana", cfg=DianaConfig(alpha=1.0, gamma=0.5,
+                                               compressor="dither64"),
+                      label="DIANA"),
+            MethodRun("fednl", cfg=FedNLConfig(alpha=1.0,
+                                               compressor="topk0.25",
+                                               mu=prob.mu),
+                      iters=min(iters, 80), label="FedNL"),
+            MethodRun("gd", cfg=GDConfig(alpha=2.0), label="GD"),
+        ),
+        iters=iters)
+
+
 def baselines_comparison(prob, iters=200):
-    lg, lh = prob.make_oracles()
+    res = assert_one_compile(lambda: run_plan(baselines_plan(prob, iters)))
     out = {}
-    cfg = FlecsConfig(m=2, grad_compressor="dither64",
-                      hess_compressor="dither64")
-    step = make_flecs_step(cfg, lg, lh)
-    rows, dt = _trajectory(step, init_state(jnp.zeros(prob.d),
-                                            prob.n_workers), prob, iters)
-    out["FLECS-CGD"] = (rows, dt)
-
-    step = make_diana_step(1.0, 0.5, "dither64", lg)
-    rows, dt = _trajectory(step, init_diana(jnp.zeros(prob.d),
-                                            prob.n_workers), prob, iters)
-    out["DIANA"] = (rows, dt)
-
-    def local_hessian(w, i):
-        return jax.hessian(lambda ww: prob.local_loss(ww, i))(w)
-
-    step = make_fednl_step(1.0, "topk0.25", lg, local_hessian, prob.mu)
-    rows, dt = _trajectory(step, init_fednl(jnp.zeros(prob.d),
-                                            prob.n_workers), prob,
-                           min(iters, 80))
-    out["FedNL"] = (rows, dt)
-
-    step = make_gd_step(2.0, lg, prob.n_workers)
-    rows, dt = _trajectory(step, init_gd(jnp.zeros(prob.d), prob.n_workers),
-                           prob, iters)
-    out["GD"] = (rows, dt)
+    for lab in res.labels:
+        n_it = res.traces[lab]["F"].shape[1]
+        dt = res.seconds / (len(res.labels) * n_it) * 1e6
+        out[lab] = (_trace_rows(res.traces[lab], 0, n_it), dt)
     return out
 
 
@@ -205,26 +259,57 @@ def vmapped_grid(prob, iters=200):
     return rows, dt
 
 
+PARTICIPATION_PS = (1.0, 0.5, 0.25)
+
+
+def participation_plan(prob, iters=300) -> ExperimentPlan:
+    """Beyond-paper participation ablation as ONE vmapped sweep axis: the
+    Bernoulli probability p is a TRACED hparam (paired with a damped alpha
+    per point), replacing the old per-p Python loop of separate compiles.
+    Bernoulli sampling (the traced form) — exact-k "choice" resolves its
+    worker count at trace time and cannot join a traced axis."""
+    from repro.core.flecs import FlecsHParams
+    from repro.core.compressors import dither_spec
+    G = len(PARTICIPATION_PS)
+    full = lambda v: jnp.full((G,), v, jnp.float32)      # noqa: E731
+    hp = FlecsHParams(
+        alpha=jnp.asarray([1.0 if p == 1.0 else 0.5
+                           for p in PARTICIPATION_PS], jnp.float32),
+        gamma=full(1.0), beta=full(1.0),
+        grad_spec=dither_spec(full(64.0)),
+        hess_spec=dither_spec(full(64.0)),
+        p=jnp.asarray(PARTICIPATION_PS, jnp.float32))
+    return ExperimentPlan(
+        problem=prob,
+        runs=(MethodRun("flecs_cgd", cfg=FlecsConfig(m=2), hparams=hp,
+                        label="participation"),),
+        iters=iters)
+
+
 def participation_ablation(prob, iters=300):
-    """Beyond-paper: client sampling p ∈ {1.0, 0.5, 0.25} — objective vs
-    the (now per-worker) cumulative bits ledger."""
-    lg, lh = prob.make_oracles()
-    rows = []
-    for p in (1.0, 0.5, 0.25):
-        cfg = FlecsConfig(m=2, alpha=1.0 if p == 1.0 else 0.5,
-                          grad_compressor="dither64",
-                          hess_compressor="dither64",
-                          participation=p, sampling="choice")
-        step = make_flecs_step(cfg, lg, lh)
-        st, tr = run_experiment(step, init_state(jnp.zeros(prob.d),
-                                                 prob.n_workers),
-                                jax.random.key(0), iters,
-                                record=lambda st: prob.metrics(st.w))
-        rows.append({"p": p, "F": float(tr["F"][-1]),
-                     "grad_sq": float(tr["grad_sq"][-1]),
-                     "Mbits_mean": float(jnp.mean(st.bits_per_node)) / 1e6,
-                     "active_mean": float(jnp.mean(tr["n_active"]))})
-    return rows
+    """Client sampling p ∈ {1.0, 0.5, 0.25} — objective vs the per-worker
+    cumulative bits ledger, the whole axis one compiled program."""
+    res = assert_one_compile(lambda: run_plan(participation_plan(prob,
+                                                                 iters)))
+    st = res.states["participation"]
+    tr = res.traces["participation"]
+    return [{"p": p, "F": float(tr["F"][g, -1]),
+             "grad_sq": float(tr["grad_sq"][g, -1]),
+             "Mbits_mean": float(jnp.mean(st.bits_per_node[g])) / 1e6,
+             "active_mean": float(jnp.mean(tr["n_active"][g]))}
+            for g, p in enumerate(PARTICIPATION_PS)]
+
+
+def ablation_grid_plan(prob, iters=200) -> ExperimentPlan:
+    """The (grad_s x hess_s x beta) cube as an ExperimentPlan (one
+    flecs_cgd segment, eight traced grid points)."""
+    hp = hparam_grid([1.0], [1.0], grad_levels=[16.0, 64.0],
+                     betas=[0.5, 1.0], hess_levels=[16.0, 64.0])
+    return ExperimentPlan(
+        problem=prob,
+        runs=(MethodRun("flecs_cgd", cfg=FlecsConfig(m=2), hparams=hp,
+                        label="grid"),),
+        iters=iters)
 
 
 def ablation_grid(prob, iters=200):
@@ -232,19 +317,12 @@ def ablation_grid(prob, iters=200):
     fixed s=64/beta=1 choices sit in, as ONE compiled vmapped scan — the
     Hessian compressor level and beta are traced sweep axes now, so no
     recompiles per point."""
-    lg, lh = prob.make_oracles()
-    cfg = FlecsConfig(m=2)
-    hp = hparam_grid([1.0], [1.0], grad_levels=[16.0, 64.0],
-                     betas=[0.5, 1.0], hess_levels=[16.0, 64.0])
-    sweep = make_flecs_sweep_step(cfg, lg, lh)
-    t0 = time.perf_counter()
-    sts, tr = run_sweep(sweep, hp, init_state(jnp.zeros(prob.d),
-                                              prob.n_workers),
-                        jax.random.key(0), iters,
-                        record=lambda st: prob.metrics(st.w))
-    jax.block_until_ready(sts)
+    res = assert_one_compile(lambda: run_plan(ablation_grid_plan(prob,
+                                                                 iters)))
+    hp = res.hparams["grid"]
+    sts, tr = res["grid"]
     G = hp.alpha.shape[0]
-    dt = (time.perf_counter() - t0) / (iters * G) * 1e6
+    dt = res.seconds / (iters * G) * 1e6
     rows = [{"grad_s": float(hp.grad_s[g]), "hess_s": float(hp.hess_s[g]),
              "beta": float(hp.beta[g]), "F": float(tr["F"][g, -1]),
              "grad_sq": float(tr["grad_sq"][g, -1]),
@@ -320,6 +398,38 @@ def staleness_ablation(prob, iters=600):
     return rows
 
 
+def run_plans(prob, csv_rows: list, iters=200):
+    """The plan-lowered comparison figures (fig1 + participation) — ONE
+    compiled program each, asserted via ``api.plan_compiles()``.  Shared by
+    the full benchmark run and the CI plan-smoke job."""
+    OUT.mkdir(exist_ok=True)
+    res1, us1 = fig1_flecs_vs_cgd(prob, iters=iters)
+    json.dump(res1, open(OUT / "fig1_flecs_vs_cgd.json", "w"), indent=1)
+    print("\n=== Fig 1/2: FLECS vs FLECS-CGD — 8 curves, ONE compiled "
+          "program ===")
+    print(f"{'method':16s} {'F@end':>10s} {'|g|^2@end':>11s} "
+          f"{'Mbits/node':>11s}")
+    for k, rows in res1.items():
+        last = rows[-1]
+        print(f"{k:16s} {last['F']:10.5f} {last['grad_sq']:11.2e} "
+              f"{last['bits_per_node'] / 1e6:11.2f}")
+        csv_rows.append(
+            (f"fig1/{k}", us1[k],
+             f"F={last['F']:.5f};bits={last['bits_per_node']:.0f}"))
+
+    part = participation_ablation(prob, iters=iters)
+    json.dump(part, open(OUT / "participation.json", "w"), indent=1)
+    print("\n=== Participation ablation: traced Bernoulli-p axis, ONE "
+          "program ===")
+    for r in part:
+        print(f"  p={r['p']:4.2f}: F={r['F']:.5f} "
+              f"Mbits/node(mean)={r['Mbits_mean']:.2f} "
+              f"active/round={r['active_mean']:.1f}")
+        csv_rows.append((f"participation/p{r['p']}", 0.0,
+                         f"F={r['F']:.5f};Mbits={r['Mbits_mean']:.2f}"))
+    return res1, part
+
+
 def run_grids(prob, csv_rows: list, iters_sync=200, iters_async=600):
     """The two traced-spec ablation grids — TWO compiled programs total.
     Shared by the full benchmark run and the CI sweep-smoke job."""
@@ -350,16 +460,7 @@ def run(csv_rows: list):
     OUT.mkdir(exist_ok=True)
     prob = make_problem(d=123, n_workers=20, r=64, mu=1e-3, seed=0)
 
-    res1, us1 = fig1_flecs_vs_cgd(prob)
-    json.dump(res1, open(OUT / "fig1_flecs_vs_cgd.json", "w"), indent=1)
-    print("\n=== Fig 1/2: FLECS vs FLECS-CGD (a9a-dim synthetic, d=123) ===")
-    print(f"{'method':16s} {'F@end':>10s} {'|g|^2@end':>11s} {'Mbits/node':>11s}")
-    for k, rows in res1.items():
-        last = rows[-1]
-        print(f"{k:16s} {last['F']:10.5f} {last['grad_sq']:11.2e} "
-              f"{last['bits_per_node'] / 1e6:11.2f}")
-        csv_rows.append((f"fig1/{k}", us1[k],
-                         f"F={last['F']:.5f};bits={last['bits_per_node']:.0f}"))
+    res1, part = run_plans(prob, csv_rows, iters=300)
     # headline check: for the same iterate count CGD ships fewer bits
     f_cgd = res1["FLECS-CGD-m1"][-1]
     f_fl = res1["FLECS-m1"][-1]
@@ -405,16 +506,6 @@ def run(csv_rows: list):
 
     run_grids(prob, csv_rows)
 
-    part = participation_ablation(prob)
-    json.dump(part, open(OUT / "participation.json", "w"), indent=1)
-    print("\n=== Partial participation (choice sampling, beyond-paper) ===")
-    for r in part:
-        print(f"  p={r['p']:4.2f}: F@300={r['F']:.5f} "
-              f"Mbits/node(mean)={r['Mbits_mean']:.2f} "
-              f"active/round={r['active_mean']:.1f}")
-        csv_rows.append((f"participation/p{r['p']}", 0.0,
-                         f"F={r['F']:.5f};Mbits={r['Mbits_mean']:.2f}"))
-
     stale = staleness_ablation(prob)
     json.dump(stale, open(OUT / "staleness.json", "w"), indent=1)
     print("\n=== Async buffered aggregation: delay x participation "
@@ -438,31 +529,47 @@ def run(csv_rows: list):
 
 
 def main():
-    """Standalone entry for the CI sweep-smoke job: run just the two
-    traced-spec ablation grids at toy size and land the JSONs in
-    benchmarks/out/ (uploaded as CI artifacts)."""
+    """Standalone entry for the CI smoke jobs: --grids-only runs the two
+    traced-spec ablation grids, --plans-only runs the plan-lowered
+    comparison figures (fig1 + participation, ONE compile each, asserted)
+    — both at toy size, landing JSONs in benchmarks/out/ (uploaded as CI
+    artifacts)."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--grids-only", action="store_true",
                     help="run only ablation_grid + async_grid")
+    ap.add_argument("--plans-only", action="store_true",
+                    help="run only the run_plan figures "
+                         "(fig1 + participation_ablation)")
     ap.add_argument("--d", type=int, default=123,
-                    help="problem size (with --grids-only)")
+                    help="problem size (with --grids-only/--plans-only)")
     ap.add_argument("--workers", type=int, default=20)
     ap.add_argument("--r", type=int, default=64)
     ap.add_argument("--iters", type=int, default=200)
     args = ap.parse_args()
-    if not args.grids_only and (args.d, args.workers, args.r,
-                                args.iters) != (123, 20, 64, 200):
+    smoke = args.grids_only or args.plans_only
+    if not smoke and (args.d, args.workers, args.r,
+                      args.iters) != (123, 20, 64, 200):
         # the full run() reproduces the paper's fixed problem sizes; fail
         # loudly rather than silently dropping the size flags
-        ap.error("--d/--workers/--r/--iters require --grids-only")
+        ap.error("--d/--workers/--r/--iters require --grids-only or "
+                 "--plans-only")
 
     csv_rows: list = []
-    if args.grids_only:
+    if smoke:
         prob = make_problem(d=args.d, n_workers=args.workers, r=args.r,
                             mu=1e-3, seed=0)
-        run_grids(prob, csv_rows, iters_sync=args.iters,
-                  iters_async=3 * args.iters)
+        if args.grids_only:
+            run_grids(prob, csv_rows, iters_sync=args.iters,
+                      iters_async=3 * args.iters)
+        if args.plans_only:
+            programs0 = api.plan_programs()
+            run_plans(prob, csv_rows, iters=args.iters)
+            # the one-compile-per-figure invariant, end to end: every
+            # run_plan call above compiled exactly one program
+            assert api.plan_compiles() == api.plan_programs() > programs0
+            print(f"\nplan programs: {api.plan_programs()}, "
+                  f"compiles: {api.plan_compiles()} (1 per figure)")
     else:
         run(csv_rows)
     print("\nname,us_per_call,derived")

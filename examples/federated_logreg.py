@@ -1,56 +1,128 @@
 """Method comparison on one federated problem: FLECS vs FLECS-CGD vs DIANA
 vs FedNL vs GD — objective versus communicated bits (the paper's x-axis).
 
-Every run is ONE compiled lax.scan program (``repro.core.driver``), and the
-``--participation`` flag turns on per-round client sampling: only sampled
-workers contribute to the server aggregate and pay communication bits.
+Every method is resolved through the declarative registry
+(``repro.core.api.get_method``) and the whole invocation is ONE
+``ExperimentPlan`` lowered by ``run_plan`` to a single compiled program —
+regardless of how many methods or participation levels are requested.
 
     PYTHONPATH=src python examples/federated_logreg.py [--d 123] [--iters 200]
+    PYTHONPATH=src python examples/federated_logreg.py --method flecs_cgd
     PYTHONPATH=src python examples/federated_logreg.py --participation 0.5
+    PYTHONPATH=src python examples/federated_logreg.py \
+        --participation 1.0,0.5,0.25          # traced sweep axis, ONE compile
     PYTHONPATH=src python examples/federated_logreg.py --staleness 2 \
         --delay-kind geometric --participation 0.5
 
-With --participation 0.5 the printed Mbits/node column is roughly halved
-for every method at the same iteration count — the partial-participation
-bits ledger in action.  With --staleness TAU > 0 the FLECS-CGD / DIANA / GD
-rows switch to the FedBuff-style async engine: updates arrive TAU rounds
-late (per --delay-kind), buffer on the server until --buffer-k have
-accumulated, and bits are charged at the arrival round — the extra
-stale/round column reports the mean age of applied updates.  --auto-alpha
-replaces the hand-tuned per-mode step sizes with the variance-motivated
-``driver.damped_alpha`` rule (alpha0 · min(1, p·K/n)).
+--method selects one registry method ("all", the default, compares every
+one).  --participation is SWEEPABLE: a comma-list becomes a traced
+Bernoulli-p hparam axis — all levels for all methods still execute as one
+compiled program (the per-p rows print separately).  Single values < 1 use
+the --sampling kind ("choice" = exact-k, static); comma-lists require
+bernoulli, the traced form.
+
+With --staleness TAU > 0 the flecs/flecs_cgd/diana/gd rows switch to the
+FedBuff-style async engine: updates arrive TAU rounds late (per
+--delay-kind), buffer on the server until --buffer-k have accumulated, and
+bits are charged at the arrival round — the extra stale/round column
+reports the mean age of applied updates (FedNL has no async variant and is
+skipped).  --auto-alpha replaces the hand-tuned per-mode step sizes with
+the variance-motivated ``driver.damped_alpha`` rule (alpha0 · min(1,
+p·K/n)).
 """
 import argparse
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.driver import (StalenessSchedule, damped_alpha,
-                               run_experiment)
-from repro.core.flecs import (FlecsConfig, init_async_state, init_state,
-                              make_flecs_async_step, make_flecs_step)
+import jax
+
+from repro.core import api
+from repro.core.api import ExperimentPlan, MethodRun, run_plan
+from repro.core.compressors import spec_from_name
+from repro.core.driver import StalenessSchedule, damped_alpha
+from repro.core.flecs import FlecsConfig, FlecsHParams
 from repro.data.logreg import make_problem
-from repro.optim.baselines import (init_diana, init_diana_async, init_fednl,
-                                   init_gd, init_gd_async, make_diana_step,
-                                   make_diana_async_step, make_fednl_step,
-                                   make_gd_step, make_gd_async_step)
+from repro.optim.baselines import (DianaConfig, DianaHParams, FedNLConfig,
+                                   FedNLHParams, GDConfig, GDHParams)
+
+METHOD_ORDER = ("flecs", "flecs_cgd", "diana", "fednl", "gd")
 
 
-def run_method(name, step, state, prob, iters):
-    state, traces = run_experiment(step, state, jax.random.key(0), iters,
-                                   record=lambda st: prob.metrics(st.w))
-    F = float(traces["F"][-1])
-    g = float(jnp.sqrt(traces["grad_sq"][-1]))
-    mbits = float(jnp.max(state.bits_per_node)) / 1e6
-    active = float(jnp.mean(traces["n_active"]))
-    line = (f"{name:12s} F={F:.6f} ||grad||={g:.2e} Mbits/node={mbits:7.3f} "
-            f"active/round={active:5.1f}")
-    if "staleness_mean" in traces:
-        arr = traces["n_arrived"]
-        stale = float(jnp.sum(traces["staleness_mean"] * arr)
-                      / jnp.maximum(jnp.sum(arr), 1.0))
-        line += f" stale/round={stale:4.2f}"
-    print(line)
+def build_runs(args, prob, ps, alphas):
+    """One MethodRun per selected method; a multi-valued --participation
+    list rides along as a traced p axis inside each run's hparam grid,
+    PAIRED with its own damped alpha per point (``alphas[i]`` goes with
+    ``ps[i]`` — a p=1.0 row always runs at its standalone step size)."""
+    p0 = ps[0]
+    sweeping = len(ps) > 1
+    # single p: honor --sampling via the static config path; p-list: the
+    # traced axis (bernoulli only — validated by the grid constructors)
+    static = dict(participation=p0 if not sweeping else 1.0,
+                  sampling=args.sampling if not sweeping else "bernoulli")
+    G = len(ps)
+    p_axis = jnp.asarray(ps, jnp.float32) if sweeping else None
+    a_axis = jnp.asarray(alphas, jnp.float32)
+    full = lambda v: jnp.full((G,), v, jnp.float32)      # noqa: E731
+
+    def bcast_spec(name):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(jnp.asarray(a), (G,)),
+            spec_from_name(name))
+
+    names = METHOD_ORDER if args.method == "all" else (args.method,)
+    if args.staleness > 0 and "fednl" in names:
+        if args.method == "fednl":
+            raise SystemExit("FedNL has no async variant; drop --staleness")
+        print("(FedNL skipped: no async variant)")
+        names = tuple(n for n in names if n != "fednl")
+
+    runs = []
+    for name in names:
+        if name in ("flecs", "flecs_cgd"):
+            gc = "identity" if name == "flecs" else "dither64"
+            cfg = FlecsConfig(m=1, alpha=float(alphas[0]),
+                              grad_compressor=gc,
+                              hess_compressor="dither64", **static)
+            # paired (alpha, p) axes, gradient spec pinned per method
+            # (plain FLECS ships identity gradients)
+            hp = FlecsHParams(a_axis, full(1.0), full(1.0),
+                              bcast_spec(gc), bcast_spec("dither64"),
+                              p_axis)
+        elif name == "diana":
+            cfg = DianaConfig(alpha=1.0, gamma=0.5, compressor="dither64",
+                              **static)
+            hp = DianaHParams(full(1.0), full(0.5), bcast_spec("dither64"),
+                              p_axis)
+        elif name == "fednl":
+            cfg = FedNLConfig(alpha=float(alphas[0]), compressor="topk0.25",
+                              mu=prob.mu, **static)
+            hp = FedNLHParams(a_axis, bcast_spec("topk0.25"), p_axis)
+        else:
+            gd_alpha = 2.0 if args.staleness == 0 else 1.0
+            cfg = GDConfig(alpha=gd_alpha, **static)
+            hp = GDHParams(full(gd_alpha), p_axis)
+        iters = min(args.iters, 80) if name == "fednl" else args.iters
+        runs.append(MethodRun(name, cfg=cfg, hparams=hp, iters=iters))
+    return runs
+
+
+def print_rows(res, ps):
+    for lab in res.labels:
+        st, tr = res[lab]
+        for g, p in enumerate(ps):
+            F = float(tr["F"][g, -1])
+            gn = float(jnp.sqrt(tr["grad_sq"][g, -1]))
+            mbits = float(jnp.max(st.bits_per_node[g])) / 1e6
+            active = float(jnp.mean(tr["n_active"][g]))
+            name = lab if len(ps) == 1 else f"{lab}@p={p}"
+            line = (f"{name:18s} F={F:.6f} ||grad||={gn:.2e} "
+                    f"Mbits/node={mbits:7.3f} active/round={active:5.1f}")
+            if "staleness_mean" in tr:
+                arr = tr["n_arrived"][g]
+                stale = float(jnp.sum(tr["staleness_mean"][g] * arr)
+                              / jnp.maximum(jnp.sum(arr), 1.0))
+                line += f" stale/round={stale:4.2f}"
+            print(line)
 
 
 def main():
@@ -58,10 +130,17 @@ def main():
     ap.add_argument("--d", type=int, default=123)
     ap.add_argument("--iters", type=int, default=200)
     ap.add_argument("--workers", type=int, default=20)
-    ap.add_argument("--participation", type=float, default=1.0,
-                    help="per-round client sampling probability (1.0 = all)")
+    ap.add_argument("--method", default="all",
+                    choices=("all",) + METHOD_ORDER,
+                    help="registry method to run (default: compare all)")
+    ap.add_argument("--participation", default="1.0",
+                    help="per-round client sampling probability; a comma-"
+                         "list (e.g. 1.0,0.5,0.25) sweeps p as ONE traced "
+                         "axis — still a single compile")
     ap.add_argument("--sampling", choices=("bernoulli", "choice"),
-                    default="choice")
+                    default="choice",
+                    help="single-p sampling kind (comma-lists are always "
+                         "bernoulli, the traced form)")
     ap.add_argument("--staleness", type=int, default=0, metavar="TAU",
                     help="async mode: updates arrive TAU rounds late "
                          "(0 = synchronous)")
@@ -75,75 +154,41 @@ def main():
                          "hand-tuned per-mode defaults")
     args = ap.parse_args()
 
+    ps = tuple(float(p) for p in args.participation.split(","))
+    if any(p <= 0 for p in ps):
+        raise SystemExit(f"--participation values must be > 0, got {ps}")
     prob = make_problem(d=args.d, n_workers=args.workers, r=64, mu=1e-3)
-    lg, lh = prob.make_oracles()
-    p, samp = args.participation, args.sampling
     tau = args.staleness
-    sched = StalenessSchedule(args.delay_kind, tau=tau)
     K = args.buffer_k or max(1, args.workers // 4)
     # second-order steps need damping once client sampling / staleness add
-    # variance (stale preconditioned updates amplify subset noise)
+    # variance (stale preconditioned updates amplify subset noise).  Each
+    # sweep point gets the alpha its own p would get standalone.
     if args.auto_alpha:
         # synchronous rounds flush a whole sampled cohort at once, so the
         # effective buffer size is round(p·n)
-        K_eff = K if tau > 0 else max(1, round(p * args.workers))
-        alpha = float(damped_alpha(1.0, p, K_eff, args.workers))
-        print(f"auto-damped alpha = {alpha:.3f} "
-              f"(p={p}, K={K_eff}, n={args.workers})")
+        alphas = []
+        for p in ps:
+            K_eff = K if tau > 0 else max(1, round(p * args.workers))
+            alphas.append(float(damped_alpha(1.0, p, K_eff, args.workers)))
+            print(f"auto-damped alpha = {alphas[-1]:.3f} "
+                  f"(p={p}, K={K_eff}, n={args.workers})")
     else:
-        alpha = 1.0 if (p >= 1.0 and tau == 0) else (0.5 if tau == 0 else 0.2)
+        alphas = [1.0 if (p >= 1.0 and tau == 0)
+                  else (0.5 if tau == 0 else 0.2) for p in ps]
 
-    for name, gc in (("FLECS", "identity"), ("FLECS-CGD", "dither64")):
-        cfg = FlecsConfig(m=1, alpha=alpha, grad_compressor=gc,
-                          hess_compressor="dither64",
-                          participation=p, sampling=samp)
-        if tau > 0:
-            run_method(name + "+async",
-                       make_flecs_async_step(cfg, lg, lh, sched, K),
-                       init_async_state(jnp.zeros(prob.d), prob.n_workers,
-                                        cfg.m, sched.max_delay),
-                       prob, args.iters)
-        else:
-            run_method(name, make_flecs_step(cfg, lg, lh),
-                       init_state(jnp.zeros(prob.d), prob.n_workers), prob,
-                       args.iters)
-
-    if tau > 0:
-        run_method("DIANA+async",
-                   make_diana_async_step(1.0, 0.5, "dither64", lg, sched, K,
-                                         participation=p, sampling=samp),
-                   init_diana_async(jnp.zeros(prob.d), prob.n_workers,
-                                    sched.max_delay), prob, args.iters)
-    else:
-        run_method("DIANA",
-                   make_diana_step(1.0, 0.5, "dither64", lg,
-                                   participation=p, sampling=samp),
-                   init_diana(jnp.zeros(prob.d), prob.n_workers), prob,
-                   args.iters)
-
-    def local_hessian(w, i):
-        return jax.hessian(lambda ww: prob.local_loss(ww, i))(w)
-
-    run_method("FedNL",
-               make_fednl_step(alpha, "topk0.25", lg, local_hessian, prob.mu,
-                               participation=p, sampling=samp),
-               init_fednl(jnp.zeros(prob.d), prob.n_workers), prob,
-               min(args.iters, 80))
-    if tau > 0:
-        # stale uncompressed gradients need damping too: alpha halved vs
-        # the synchronous GD row's 2.0, so the printed async degradation
-        # mixes staleness AND the deliberate step-size cut
-        run_method("GD+async",
-                   make_gd_async_step(1.0, lg, prob.n_workers, sched, K,
-                                      participation=p, sampling=samp),
-                   init_gd_async(jnp.zeros(prob.d), prob.n_workers,
-                                 sched.max_delay), prob, args.iters)
-    else:
-        run_method("GD",
-                   make_gd_step(2.0, lg, prob.n_workers,
-                                participation=p, sampling=samp),
-                   init_gd(jnp.zeros(prob.d), prob.n_workers), prob,
-                   args.iters)
+    plan = ExperimentPlan(
+        problem=prob,
+        runs=tuple(build_runs(args, prob, ps, alphas)),
+        iters=args.iters,
+        staleness=(StalenessSchedule(args.delay_kind, tau=tau)
+                   if tau > 0 else None),
+        buffer_k=K)
+    res = run_plan(plan)
+    assert api.plan_compiles() == api.plan_programs() == 1, \
+        "the example must lower to exactly one compiled program"
+    print_rows(res, ps)
+    n_traj = sum(len(ps) for _ in res.labels)
+    print(f"({n_traj} trajectories, 1 compiled program)")
 
 
 if __name__ == "__main__":

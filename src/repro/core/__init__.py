@@ -1,5 +1,7 @@
 """FLECS-CGD core: the paper's primary contribution as a composable library.
 
+Declarative method registry + experiment plans (one compile per figure):
+    from repro.core.api import ExperimentPlan, MethodRun, get_method, run_plan
 Traced compressor algebra (specs as vmappable sweep axes):
     from repro.core.compressors import CompressorSpec, compress, spec_bits
 Exact mode (paper-scale problems):
@@ -8,12 +10,19 @@ Experiment engine (lax.scan runs, client sampling, vmapped sweeps):
     from repro.core.driver import run_experiment, run_sweep, run_async_sweep
 DL-scale trainer (TPU-pod realization):
     from repro.core.dl_flecs import FlecsDLConfig, make_flecs_train_step
+
+NOTE: ``repro.core.api`` is intentionally NOT imported here — it pulls
+``repro.optim.baselines`` (the whole baseline suite) into every core
+import; import it explicitly.
 """
 from repro.core.compressors import (Compressor, CompressorSpec, compress,
-                                    get_compressor, spec_bits, spec_from_name,
-                                    spec_omega)
+                                    get_compressor, psum_level_cap,
+                                    spec_bits, spec_from_name, spec_omega,
+                                    stack_specs)
 from repro.core.driver import (damped_alpha, participation_mask,
-                               run_async_sweep, run_experiment, run_sweep)
+                               resolve_participation, run_async_sweep,
+                               run_experiment, run_sweep, sweep_keys,
+                               sweep_program)
 from repro.core.flecs import (FlecsAsyncHParams, FlecsConfig, FlecsHParams,
                               FlecsState, async_hparam_grid, bits_per_round,
                               hparam_grid, init_state, make_flecs_step,
@@ -21,9 +30,11 @@ from repro.core.flecs import (FlecsAsyncHParams, FlecsConfig, FlecsHParams,
 from repro.core.sketch import sketch
 
 __all__ = ["Compressor", "CompressorSpec", "compress", "get_compressor",
-           "spec_bits", "spec_from_name", "spec_omega",
+           "psum_level_cap", "spec_bits", "spec_from_name", "spec_omega",
+           "stack_specs",
            "FlecsAsyncHParams", "FlecsConfig", "FlecsHParams", "FlecsState",
            "async_hparam_grid", "bits_per_round", "damped_alpha",
            "hparam_grid", "init_state", "make_flecs_step",
-           "make_flecs_sweep_step", "participation_mask", "run_async_sweep",
-           "run_experiment", "run_sweep", "sketch"]
+           "make_flecs_sweep_step", "participation_mask",
+           "resolve_participation", "run_async_sweep", "run_experiment",
+           "run_sweep", "sketch", "sweep_keys", "sweep_program"]

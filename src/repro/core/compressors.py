@@ -275,6 +275,16 @@ def as_spec(c: Union[str, CompressorSpec, Compressor]) -> CompressorSpec:
     return spec_from_name(c)
 
 
+def stack_specs(*specs: Union[str, CompressorSpec, Compressor]
+                ) -> CompressorSpec:
+    """Stack scalar specs into one [G] spec whose leading axis may vary the
+    FAMILY itself — e.g. ``stack_specs("identity", "dither64")`` is the
+    FLECS-vs-FLECS-CGD comparison as a single vmappable grid axis (the
+    lax.switch dispatch keys on the traced family id per grid point)."""
+    stacked = [as_spec(s) for s in specs]
+    return jax.tree.map(lambda *leaves: jnp.stack(leaves), *stacked)
+
+
 # ---------------------------------------------------------------------------
 # int8 wire format for the compressed all-reduce (TPU-pod realization)
 # ---------------------------------------------------------------------------
@@ -294,6 +304,20 @@ def encode_int8(key, x, s: int = 127):
 
 def decode_int8(levels, scale):
     return levels.astype(jnp.float32) * scale
+
+
+def psum_level_cap(s_levels, n_workers: int):
+    """Dithering-level cap for the int8 collective, on the TRACED path.
+
+    The f16 psum accumulation of ``n`` workers' integer levels is exact only
+    while level sums stay <= 2047 (f16 holds integers exactly to 2048), so
+    the usable level count is min(s, 2047 // n).  Expressed as a lax-side
+    clip — not Python ``min`` — so ``s_levels`` can be a traced sweep axis
+    (vmapping the DL trainer's wire format over level grids).  ``n_workers``
+    is the static federation size (a mesh-axis product).
+    """
+    cap = jnp.float32(max(1, 2047 // n_workers))
+    return jnp.clip(jnp.asarray(s_levels, jnp.float32), 1.0, cap)
 
 
 def shared_scale_levels(key, x, s, axes):

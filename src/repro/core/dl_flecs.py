@@ -37,7 +37,8 @@ import numpy as np
 from repro.compat import axis_size, shard_map
 from repro.configs.base import ModelConfig
 from repro.core.compressors import (dither_spec, identity_spec,
-                                    shared_scale_levels, spec_bits)
+                                    psum_level_cap, shared_scale_levels,
+                                    spec_bits)
 from repro.models.context import ModelContext
 from repro.train.step import _loss_fn
 
@@ -48,7 +49,9 @@ P = jax.sharding.PartitionSpec
 class FlecsDLConfig:
     alpha: float = 1e-2            # iterate step size
     gamma: float = 0.5             # shift learning rate
-    s_levels: int = 127            # int8 dithering levels
+    s_levels: int = 127            # int8 dithering levels (may be a traced
+                                   # jax scalar: the cap is lax-side, see
+                                   # compressors.psum_level_cap)
     m: int = 0                     # sketch columns (0 = first-order CGD/DIANA)
     omega: float = 1e-5
     Omega: float = 1e2
@@ -129,8 +132,10 @@ def make_flecs_train_step(cfg: ModelConfig, ctx: ModelContext,
             n *= axis_size(a)
         # the wire-format spec of the compressed collective: int8 random
         # dithering, levels capped so n workers' level sums stay exact in
-        # the f16 psum accumulation below
-        gspec = dither_spec(max(1, min(fcfg.s_levels, 2047 // n)))
+        # the f16 psum accumulation below.  The cap is a lax-side clip
+        # (compressors.psum_level_cap), so fcfg.s_levels may be a traced
+        # sweep axis — DL-scale level grids vmapped in one program.
+        gspec = dither_spec(psum_level_cap(fcfg.s_levels, n))
         payload_bits = jnp.float32(0.0)   # idealized uplink (spec_bits)
 
         # --- compressed gradient differences (the CGD contribution) -------

@@ -31,7 +31,9 @@ site.  This module replaces all of those loops with **one** compiled
   or exact-k choice), the partial-participation axis used by
   ``repro.core.flecs`` and ``repro.optim.baselines``.  Workers outside the
   sampled set neither contribute to the server aggregate nor pay
-  communication bits that round.
+  communication bits that round.  The Bernoulli probability may itself be
+  a **traced** sweep axis (see :func:`resolve_participation`), so a
+  participation ablation is one vmapped program, not a Python loop.
 
 Buffered / asynchronous aggregation (FedBuff-style staleness)
 -------------------------------------------------------------
@@ -97,19 +99,48 @@ def bits_dtype():
     return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
 
 
-def participation_mask(key, n: int, p: float = 1.0,
+def _concrete_nonpositive(p) -> bool:
+    """True iff ``p`` holds a concrete value <= 0.  Abstract tracers (whose
+    values only exist at run time) report False — their grids are validated
+    at construction instead."""
+    try:
+        return bool(jnp.any(p <= 0))
+    except jax.errors.ConcretizationTypeError:
+        return False
+
+
+def participation_mask(key, n: int, p=1.0,
                        kind: str = "bernoulli") -> jnp.ndarray:
     """Per-round client-sampling mask, [n] float32 in {0, 1}.
 
     p must be > 0; p >= 1 returns all-ones (full participation, key unused).
     kind="bernoulli": each worker participates independently w.p. p (the
         round may sample zero workers; aggregation guards handle that).
+        ``p`` may be a **traced** jax scalar — a vmappable sweep axis: the
+        mask is the same ``uniform(key) < p`` draw as the static path, so a
+        traced-p grid point reproduces the static run mask-for-mask.
     kind="choice": exactly max(1, round(p*n)) workers, uniformly without
         replacement (FedLab-style client sampling) — every round samples at
-        least one worker, even for arbitrarily small p.
+        least one worker, even for arbitrarily small p.  The worker count is
+        resolved at trace time, so choice has NO traced-p path (rejected).
     Both kinds are pure functions of (key, n, p, kind) and trace cleanly
-    under jit/vmap/scan (the exact-k count is resolved at trace time).
+    under jit/vmap/scan.
     """
+    if not isinstance(p, (int, float)):
+        try:
+            # any CONCRETE scalar (numpy/jax) stays on the static path
+            p = float(p)
+        except (TypeError, jax.errors.ConcretizationTypeError):
+            # traced path: p only exists at run time (a jit argument or a
+            # vmapped sweep axis)
+            if kind != "bernoulli":
+                raise ValueError(
+                    f"traced participation p requires kind='bernoulli'; "
+                    f"{kind!r} resolves its worker count at trace time")
+            p = jnp.asarray(p, jnp.float32)
+            if _concrete_nonpositive(p):
+                raise ValueError(f"participation p must be > 0, got {p}")
+            return (jax.random.uniform(key, (n,)) < p).astype(jnp.float32)
     if p <= 0:
         raise ValueError(f"participation p must be > 0, got {p}")
     if p >= 1.0:
@@ -121,6 +152,31 @@ def participation_mask(key, n: int, p: float = 1.0,
         perm = jax.random.permutation(key, n)
         return (perm < k).astype(jnp.float32)
     raise ValueError(f"unknown sampling kind: {kind!r}")
+
+
+def validate_ps(ps) -> None:
+    """Grid-construction guard for a traced participation axis: the traced
+    path cannot check p at run time (see :func:`_concrete_nonpositive`),
+    so every ``ps=`` grid constructor validates here."""
+    if ps is not None and any(p <= 0 for p in ps):
+        raise ValueError(f"participation ps must be > 0, got {list(ps)}")
+
+
+def resolve_participation(key, n: int, cfg_p, kind: str, hp_p=None):
+    """The sweep steps' mask entry point: a per-point hparam probability
+    ``hp_p`` (possibly TRACED — the participation sweep axis) overrides the
+    static config ``cfg_p`` when present.  ``hp_p is None`` keeps the
+    pre-axis behavior exactly; 'choice' sampling has no traced form, so
+    combining it with an hp_p axis fails loudly instead of silently
+    ignoring the axis."""
+    if hp_p is None:
+        return participation_mask(key, n, cfg_p, kind)
+    if kind != "bernoulli":
+        raise ValueError(
+            "traced participation p requires sampling='bernoulli'; "
+            f"sampling={kind!r} resolves its worker count statically — drop "
+            "the p axis or switch the config to bernoulli")
+    return participation_mask(key, n, hp_p, "bernoulli")
 
 
 def masked_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -404,34 +460,32 @@ def run_experiment(step: Callable, state, key, iters: int,
     return run(state, kb)
 
 
-def run_sweep(sweep_step: Callable, hparams, state, key, iters: int,
-              record: Optional[Callable] = None,
-              record_every: int = 1, trace_dtype=None):
-    """Vmapped hyperparameter sweep: a grid of runs as ONE device program.
-
-    sweep_step: (hp, state, key) -> (state, aux), e.g. from
-                ``repro.core.flecs.make_flecs_sweep_step`` — hp fields
-                (step sizes, dithering levels) are traced, so one compiled
-                program serves the whole grid.
-    hparams:    pytree whose leaves share a leading grid axis [G, ...]
-                (e.g. a ``FlecsHParams`` of [G] arrays).
-    state:      a single initial state, shared by every grid point.
-    record_every / trace_dtype: as in :func:`run_experiment`.
-    Returns (final_states, traces) with leading grid axis [G, ...] /
-    [G, iters // record_every, ...].  Each grid point gets an independent
-    key stream: point g steps with ``split(split(key, G)[g], iters)`` — the
-    exact stream a standalone ``run_experiment(step_g, state,
-    split(key, G)[g], iters)`` would use, so a sweep row reproduces the
-    corresponding independent run bit-for-bit.
-    """
-    G = jax.tree.leaves(hparams)[0].shape[0]
-    keys = jax.vmap(lambda k: jax.random.split(k, iters))(
+def sweep_keys(key, G: int, iters: int):
+    """[G, iters] per-point scan key streams: point g steps with
+    ``split(split(key, G)[g], iters)`` — the exact stream a standalone
+    ``run_experiment(step_g, state, split(key, G)[g], iters)`` would use,
+    so a sweep row reproduces the corresponding independent run
+    bit-for-bit."""
+    return jax.vmap(lambda k: jax.random.split(k, iters))(
         jax.random.split(key, G))
+
+
+def sweep_program(sweep_step: Callable, iters: int,
+                  record: Optional[Callable] = None,
+                  record_every: int = 1, trace_dtype=None) -> Callable:
+    """The UNJITTED vmapped-sweep program: fn(hparams, state, keys) ->
+    (final_states, traces) with keys from :func:`sweep_keys`.
+
+    :func:`run_sweep` is ``jax.jit`` of exactly this; ``repro.core.api``'s
+    ``run_plan`` composes several of these (one per structurally distinct
+    method segment) into ONE jitted program — the one-compile-per-figure
+    invariant.
+    """
     if record_every != 1 and (record_every < 1 or iters % record_every):
         raise ValueError(
             f"record_every={record_every} must divide iters={iters}")
 
-    def one(hp, ks):
+    def one(hp, state, ks):
         body = _scan_body(lambda st, k: sweep_step(hp, st, k), record,
                           trace_dtype)
         if record_every == 1:
@@ -439,7 +493,31 @@ def run_sweep(sweep_step: Callable, hparams, state, key, iters: int,
         kb = ks.reshape((iters // record_every, record_every) + ks.shape[1:])
         return jax.lax.scan(_thinned(body, record_every), state, kb)
 
-    return jax.jit(jax.vmap(one))(hparams, keys)
+    return jax.vmap(one, in_axes=(0, None, 0))
+
+
+def run_sweep(sweep_step: Callable, hparams, state, key, iters: int,
+              record: Optional[Callable] = None,
+              record_every: int = 1, trace_dtype=None):
+    """Vmapped hyperparameter sweep: a grid of runs as ONE device program.
+
+    sweep_step: (hp, state, key) -> (state, aux), e.g. from
+                ``repro.core.flecs.make_flecs_sweep_step`` — hp fields
+                (step sizes, dithering levels, participation p) are traced,
+                so one compiled program serves the whole grid.
+    hparams:    pytree whose leaves share a leading grid axis [G, ...]
+                (e.g. a ``FlecsHParams`` of [G] arrays).
+    state:      a single initial state, shared by every grid point.
+    record_every / trace_dtype: as in :func:`run_experiment`.
+    Returns (final_states, traces) with leading grid axis [G, ...] /
+    [G, iters // record_every, ...].  Per-point key streams come from
+    :func:`sweep_keys`, so a sweep row reproduces the corresponding
+    independent run bit-for-bit.
+    """
+    G = jax.tree.leaves(hparams)[0].shape[0]
+    fn = sweep_program(sweep_step, iters, record=record,
+                       record_every=record_every, trace_dtype=trace_dtype)
+    return jax.jit(fn)(hparams, state, sweep_keys(key, G, iters))
 
 
 def run_async_sweep(sweep_step: Callable, hparams, state, key, iters: int,

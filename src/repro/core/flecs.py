@@ -40,6 +40,11 @@ Partial participation (beyond-paper axis, FedNL/FedLab-style): set
 ``driver.participation_mask``.  Only sampled workers contribute to the
 server aggregates (g̃, Ỹ, M̄, B̄), update their shift h^i / approximation
 B^i, and pay communication bits; skipped workers are charged zero bits.
+Participation is ALSO a sweep axis: ``FlecsHParams.p`` (``hparam_grid``'s
+``ps=``) carries a traced Bernoulli probability per grid point, so a
+participation ablation vmaps through one compiled program
+(``driver.resolve_participation``; exact-k "choice" sampling stays on the
+static config path).
 
 Asynchronous buffered aggregation (beyond-paper axis, FedBuff-style): a
 sampled worker's message (c_k^i, Ỹ_k^i, M_k^i) arrives ``tau`` rounds
@@ -77,7 +82,8 @@ from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
                                applied_staleness, bits_dtype, buffer_busy,
                                buffer_receive, buffer_send, damped_alpha,
                                fedbuff_accumulate, init_buffer, masked_mean,
-                               participation_mask, sample_delays)
+                               resolve_participation, sample_delays,
+                               validate_ps)
 from repro.core.sketch import sketch
 from repro.core.updates import direct_update, truncated_lsr1_update
 
@@ -115,12 +121,18 @@ class FlecsHParams(NamedTuple):
       beta      — direct-update (Alg 3) learning rate
       grad_spec — gradient CompressorSpec (family + level/fraction, traced)
       hess_spec — Hessian-difference CompressorSpec
+      p         — Bernoulli participation probability, or None to defer to
+                  the static ``FlecsConfig.participation``/``sampling``
+                  (None is an empty pytree leaf, so pre-axis grids are
+                  untouched; a traced p axis requires bernoulli sampling —
+                  see ``driver.resolve_participation``)
     """
     alpha: jnp.ndarray
     gamma: jnp.ndarray
     beta: jnp.ndarray
     grad_spec: CompressorSpec
     hess_spec: CompressorSpec
+    p: Optional[jnp.ndarray] = None
 
     @property
     def grad_s(self):
@@ -142,22 +154,28 @@ def hparams_from_config(cfg: FlecsConfig) -> FlecsHParams:
 
 
 def hparam_grid(alphas, gammas, grad_levels, betas=(1.0,),
-                hess_levels=(64.0,)) -> FlecsHParams:
+                hess_levels=(64.0,), ps=None) -> FlecsHParams:
     """Cartesian product of the sweep axes, flattened to [G] leaves.
 
     ``grad_levels``/``hess_levels`` build dithering specs (the paper's
     experimental compressor); grids over other families — or mixing
     families along an axis — can be built directly as a ``FlecsHParams``
-    of stacked ``CompressorSpec`` leaves.
+    of stacked ``CompressorSpec`` leaves (``compressors.stack_specs``).
+    ``ps`` (optional) adds a traced Bernoulli participation axis; ``None``
+    keeps participation on the static config path.
     """
-    a, g, s, b, hs = jnp.meshgrid(jnp.asarray(alphas, jnp.float32),
-                                  jnp.asarray(gammas, jnp.float32),
-                                  jnp.asarray(grad_levels, jnp.float32),
-                                  jnp.asarray(betas, jnp.float32),
-                                  jnp.asarray(hess_levels, jnp.float32),
-                                  indexing="ij")
+    validate_ps(ps)
+    a, g, s, b, hs, p = jnp.meshgrid(
+        jnp.asarray(alphas, jnp.float32),
+        jnp.asarray(gammas, jnp.float32),
+        jnp.asarray(grad_levels, jnp.float32),
+        jnp.asarray(betas, jnp.float32),
+        jnp.asarray(hess_levels, jnp.float32),
+        jnp.asarray([1.0] if ps is None else ps, jnp.float32),
+        indexing="ij")
     return FlecsHParams(a.ravel(), g.ravel(), b.ravel(),
-                        dither_spec(s.ravel()), dither_spec(hs.ravel()))
+                        dither_spec(s.ravel()), dither_spec(hs.ravel()),
+                        None if ps is None else p.ravel())
 
 
 class FlecsState(NamedTuple):
@@ -261,7 +279,8 @@ def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
     S = sketch(cfg.sketch_kind, d, m, state.k)          # shared via seed
 
     k_g, k_h, k_q, k_c, k_p = jax.random.split(key, 5)
-    mask = participation_mask(k_p, n, cfg.participation, cfg.sampling)  # [n]
+    mask = resolve_participation(k_p, n, cfg.participation, cfg.sampling,
+                                 hp.p)                                  # [n]
 
     c_all, M_all, C_all, BS_all = _worker_messages(
         local_grad, local_hvp, hp.grad_spec, hp.hess_spec,
@@ -348,9 +367,12 @@ def async_hparams_from_config(cfg: FlecsConfig, tau: int,
 
 
 def async_hparam_grid(taus, buffer_ks, *, alpha=1.0, gamma=1.0, beta=1.0,
-                      grad_s=64.0, hess_s=64.0,
+                      grad_s=64.0, hess_s=64.0, ps=None,
                       auto_damp=None) -> FlecsAsyncHParams:
-    """Cartesian (tau × buffer_k) staleness grid, flattened to [G] leaves.
+    """Cartesian (tau × buffer_k [× p]) staleness grid, [G] leaves.
+
+    ps: optional traced Bernoulli participation axis (requires a config
+    with ``sampling="bernoulli"``); None keeps the static config path.
 
     auto_damp: optional ``(sampled_frac, n_workers)`` — per-point alpha
     becomes ``driver.damped_alpha(alpha, sampled_frac, K_eff, n_workers)``,
@@ -360,22 +382,31 @@ def async_hparam_grid(taus, buffer_ks, *, alpha=1.0, gamma=1.0, beta=1.0,
     can never average fewer than that and K_eff = max(K, round(p·n)) —
     matching the synchronous engine the tau=0 point collapses to; delayed
     points trickle arrivals (busy-exclusion staggers the cohort) and keep
-    K_eff = K.
+    K_eff = K.  With a ``ps`` axis the damping uses each point's own p.
     """
-    t, K = jnp.meshgrid(jnp.asarray(taus, jnp.int32),
-                        jnp.asarray(buffer_ks, jnp.float32), indexing="ij")
-    t, K = t.ravel(), K.ravel()
+    validate_ps(ps)
+    t, K, p = jnp.meshgrid(
+        jnp.asarray(taus, jnp.int32), jnp.asarray(buffer_ks, jnp.float32),
+        jnp.asarray([1.0] if ps is None else ps, jnp.float32),
+        indexing="ij")
+    t, K, p = t.ravel(), K.ravel(), p.ravel()
     G = t.shape[0]
     if auto_damp is not None:
         frac, n_workers = auto_damp
-        cohort = jnp.float32(max(1, round(frac * n_workers)))
+        if ps is None:
+            cohort = jnp.float32(max(1, round(frac * n_workers)))
+            frac_pt = frac
+        else:
+            cohort = jnp.maximum(1.0, jnp.round(p * n_workers))
+            frac_pt = p
         K_eff = jnp.where(t == 0, jnp.maximum(K, cohort), K)
-        alphas = damped_alpha(alpha, frac, K_eff, n_workers)
+        alphas = damped_alpha(alpha, frac_pt, K_eff, n_workers)
     else:
         alphas = jnp.full((G,), alpha, jnp.float32)
     full = lambda v: jnp.full((G,), v, jnp.float32)     # noqa: E731
     hp = FlecsHParams(alphas, full(gamma), full(beta),
-                      dither_spec(full(grad_s)), dither_spec(full(hess_s)))
+                      dither_spec(full(grad_s)), dither_spec(full(hess_s)),
+                      None if ps is None else p)
     return FlecsAsyncHParams(hp, t, K)
 
 
@@ -448,7 +479,8 @@ def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
         k_g, k_h, k_q, k_c, k_p = jax.random.split(key, 5)   # == sync split
         k_tau = jax.random.fold_in(key, ASYNC_SALT)
 
-        mask = participation_mask(k_p, n, cfg.participation, cfg.sampling)
+        mask = resolve_participation(k_p, n, cfg.participation,
+                                     cfg.sampling, hp.p)
         send_mask = mask * (1.0 - buffer_busy(state.buf))
 
         # cond-gate the worker compute: in a fixed-delay cycle most rounds

@@ -11,21 +11,47 @@ All share the (local_grad, local_hvp) oracle interface of
 (lax.scan), and report per-node communicated bits as a per-worker [n]
 vector (``bits_per_node``), so the benchmark plots share an x-axis.
 
-Partial participation: every step maker takes ``participation``/``sampling``
-kwargs (see ``driver.participation_mask``).  Only sampled workers enter the
-server aggregate, update their local server-side state (DIANA shift h^i,
-FedNL Hessian H^i), and pay bits; skipped workers are charged zero bits
-that round.
+Traced hyperparameters — the FLECS collapse, applied to every baseline
+-----------------------------------------------------------------------
+Each method is a (config, hparams, sweep step) triple exactly like
+``repro.core.flecs``:
 
-Asynchronous buffered aggregation: ``make_diana_async_step`` and
-``make_gd_async_step`` give the first-order baselines the same
-FedBuff-style staleness axis as ``flecs.make_flecs_async_step`` — per-round
-delays from a ``driver.StalenessSchedule``, a bounded in-flight
-``MessageBuffer``, busy workers excluded from sampling, bits charged at the
-*arrival* round, and an aggregate step applied once ``buffer_k`` updates
-have buffered.  At ``tau=0`` (with ``buffer_k=1``, or ``buffer_k=n`` under
-full participation) they collapse to the synchronous steps trace-for-trace,
-so delay ablations compare methods on one engine.
+* a static config dataclass (:class:`DianaConfig`, :class:`FedNLConfig`,
+  :class:`GDConfig`) holds the structural choices (sampling kind, FedNL's
+  regularizer μ) plus scalar defaults;
+* an hparam pytree (:class:`DianaHParams`, :class:`FedNLHParams`,
+  :class:`GDHParams`) carries the per-round knobs as traced values — step
+  sizes, full ``CompressorSpec``s, and a Bernoulli participation
+  probability ``p`` — with ``*_hparam_grid`` / ``*_hparams_from_config``
+  constructors;
+* ``make_*_sweep_step(cfg, oracles…)`` builds the single
+  ``step(hp, state, key)`` implementation, and the legacy
+  ``make_*_step(alpha, …)`` entry points are *specializations* of it at a
+  concrete hparams point — same ops, same key stream, so the redesign is
+  pinned bit-for-bit by the pre-existing tests.
+
+This is what lets ``repro.core.api``'s method registry put DIANA / FedNL /
+GD on the same sweep-native footing as FLECS: a (p × level × alpha) grid
+for any method is ONE compiled ``driver.run_sweep`` program.
+
+Partial participation: sampled via ``driver.resolve_participation`` — the
+hparams' traced ``p`` (bernoulli) when present, else the static config
+``participation``/``sampling`` (the only path for exact-k "choice").  Only
+sampled workers enter the server aggregate, update their local server-side
+state (DIANA shift h^i, FedNL Hessian H^i), and pay bits.
+
+Asynchronous buffered aggregation: ``make_diana_async_sweep_step`` /
+``make_gd_async_sweep_step`` give the first-order baselines the same
+FedBuff-style traced staleness axes as FLECS (:class:`DianaAsyncHParams` /
+:class:`GDAsyncHParams` wrap the sync hparams with traced tau and
+buffer_k); ``make_diana_async_step`` / ``make_gd_async_step`` are their
+concrete specializations.  Per-round delays come from
+``driver.sample_delays``, messages buffer in a bounded in-flight
+``MessageBuffer``, busy workers are excluded from sampling, bits are
+charged at the *arrival* round, and an aggregate step is applied once
+``buffer_k`` updates have buffered.  At ``tau=0`` (with ``buffer_k=1``, or
+``buffer_k=n`` under full participation) they collapse to the synchronous
+steps trace-for-trace, so delay ablations compare methods on one engine.
 
 Spec-based compression: every ``compressor`` argument accepts a registry
 name, a ``Compressor``, or a (possibly traced) ``CompressorSpec`` — the
@@ -38,17 +64,69 @@ value wire accounting.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import as_spec, compress, spec_bits
+from repro.core.compressors import (CompressorSpec, as_spec, compress,
+                                    spec_bits)
 from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
                                applied_staleness, bits_dtype, buffer_busy,
                                buffer_receive, buffer_send,
                                fedbuff_accumulate, init_buffer, masked_mean,
-                               participation_mask)
+                               resolve_participation, sample_delays,
+                               validate_ps)
+
+
+def _grid_axes(*axes, ps=None):
+    """Cartesian product of 1-D axes (+ an optional participation axis),
+    each returned raveled to [G] float32.  The participation axis is
+    validated (``driver.validate_ps``) at build time — the traced path
+    cannot."""
+    validate_ps(ps)
+    mesh = jnp.meshgrid(*[jnp.asarray(a, jnp.float32) for a in axes],
+                        jnp.asarray([1.0] if ps is None else ps,
+                                    jnp.float32),
+                        indexing="ij")
+    flat = [m.ravel() for m in mesh]
+    return flat[:-1] + [None if ps is None else flat[-1]]
+
+
+# ---------------------------------------------------------------------------
+# DIANA
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DianaConfig:
+    """Static structure + scalar defaults for DIANA."""
+    alpha: float = 1.0
+    gamma: float = 0.5
+    compressor: str = "dither64"      # name / Compressor / CompressorSpec
+    participation: float = 1.0
+    sampling: str = "bernoulli"       # "bernoulli" | "choice" (exact-k)
+
+
+class DianaHParams(NamedTuple):
+    """Traced per-round DIANA knobs — scalars or [G] sweep-axis arrays.
+    ``p=None`` defers participation to the static config path."""
+    alpha: jnp.ndarray
+    gamma: jnp.ndarray
+    spec: CompressorSpec
+    p: Optional[jnp.ndarray] = None
+
+
+def diana_hparams_from_config(cfg: DianaConfig) -> DianaHParams:
+    return DianaHParams(jnp.float32(cfg.alpha), jnp.float32(cfg.gamma),
+                        as_spec(cfg.compressor))
+
+
+def diana_hparam_grid(alphas=(1.0,), gammas=(0.5,), levels=(64.0,),
+                      ps=None) -> DianaHParams:
+    """Cartesian (alpha × gamma × dither-level [× p]) grid, [G] leaves."""
+    from repro.core.compressors import dither_spec
+    a, g, s, p = _grid_axes(alphas, gammas, levels, ps=ps)
+    return DianaHParams(a, g, dither_spec(s), p)
 
 
 class DianaState(NamedTuple):
@@ -58,31 +136,47 @@ class DianaState(NamedTuple):
     bits_per_node: jnp.ndarray   # [n]
 
 
-def make_diana_step(alpha: float, gamma: float, compressor,
-                    local_grad: Callable, participation: float = 1.0,
-                    sampling: str = "bernoulli"):
-    spec = as_spec(compressor)
+def make_diana_sweep_step(cfg: DianaConfig, local_grad: Callable):
+    """Build step(hp: DianaHParams, state, key) -> (state, aux) whose step
+    sizes, compressor spec, and participation p are traced — the single
+    round implementation ``make_diana_step`` specializes."""
 
-    def step(state: DianaState, key):
+    def step(hp: DianaHParams, state: DianaState, key):
         n, d = state.h.shape
         k_g, k_q, k_p = jax.random.split(key, 3)
-        mask = participation_mask(k_p, n, participation, sampling)
+        mask = resolve_participation(k_p, n, cfg.participation,
+                                     cfg.sampling, hp.p)
 
         def worker(i, hk, kq):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
-            return compress(spec, kq, g - hk)
+            return compress(hp.spec, kq, g - hk)
 
         ks = jax.random.split(k_q, n)
         c = jax.vmap(worker)(jnp.arange(n), state.h, ks)
         g_tilde = masked_mean(c + state.h, mask)
-        w = state.w - alpha * g_tilde
-        h = state.h + gamma * mask[:, None] * c
+        w = state.w - hp.alpha * g_tilde
+        h = state.h + hp.gamma * mask[:, None] * c
         bits = state.bits_per_node + mask.astype(
-            state.bits_per_node.dtype) * spec_bits(spec, d)
+            state.bits_per_node.dtype) * spec_bits(hp.spec, d)
         new = DianaState(w, h, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
                      "n_active": jnp.sum(mask),
                      "bits_per_node": new.bits_per_node}
+
+    return step
+
+
+def make_diana_step(alpha: float, gamma: float, compressor,
+                    local_grad: Callable, participation: float = 1.0,
+                    sampling: str = "bernoulli"):
+    """Legacy entry point: the sweep step specialized at a concrete
+    hparams point — identical ops and key stream."""
+    cfg = DianaConfig(alpha, gamma, compressor, participation, sampling)
+    hp = diana_hparams_from_config(cfg)
+    sweep = make_diana_sweep_step(cfg, local_grad)
+
+    def step(state: DianaState, key):
+        return sweep(hp, state, key)
 
     return step
 
@@ -92,6 +186,14 @@ def init_diana(w0, n_workers):
                       jnp.zeros((n_workers, w0.shape[0]), jnp.float32),
                       jnp.zeros((), jnp.int32),
                       jnp.zeros((n_workers,), bits_dtype()))
+
+
+class DianaAsyncHParams(NamedTuple):
+    """Async sweep point: sync hparams + traced staleness axes (the same
+    shape as ``flecs.FlecsAsyncHParams``)."""
+    hp: DianaHParams
+    tau: jnp.ndarray
+    buffer_k: jnp.ndarray
 
 
 class DianaAsyncState(NamedTuple):
@@ -115,28 +217,29 @@ def init_diana_async(w0, n_workers, max_delay: int) -> DianaAsyncState:
                            jnp.zeros((), jnp.float32))
 
 
-def make_diana_async_step(alpha: float, gamma: float, compressor,
-                          local_grad: Callable,
-                          schedule: StalenessSchedule, buffer_k: int,
-                          participation: float = 1.0,
-                          sampling: str = "bernoulli"):
-    """DIANA with FedBuff-style buffered aggregation: compressed gradient
-    differences arrive ``schedule`` rounds late, bits are charged at the
-    arrival round, shifts h^i update on arrival (busy workers are not
-    re-sampled, so each c^i reconstructs against its compute-time shift),
-    and the server steps once ``buffer_k`` updates have buffered."""
-    spec = as_spec(compressor)
+def make_diana_async_sweep_step(cfg: DianaConfig, local_grad: Callable,
+                                delay_kind: str = "fixed", q: float = 0.5):
+    """DIANA with FedBuff-style buffered aggregation, sweep-native: the
+    delay bound tau, flush threshold buffer_k, step sizes, spec, and
+    participation p are ALL traced — ``driver.run_async_sweep`` vmaps a
+    staleness grid through one compiled program.  Compressed gradient
+    differences arrive late, bits are charged at the arrival round, shifts
+    h^i update on arrival (busy workers are not re-sampled, so each c^i
+    reconstructs against its compute-time shift), and the server steps once
+    ``buffer_k`` updates have buffered."""
 
-    def step(state: DianaAsyncState, key):
+    def step(ahp: DianaAsyncHParams, state: DianaAsyncState, key):
+        hp = ahp.hp
         n, d = state.h.shape
         k_g, k_q, k_p = jax.random.split(key, 3)            # == sync split
         k_tau = jax.random.fold_in(key, ASYNC_SALT)
-        mask = participation_mask(k_p, n, participation, sampling)
+        mask = resolve_participation(k_p, n, cfg.participation,
+                                     cfg.sampling, hp.p)
         send_mask = mask * (1.0 - buffer_busy(state.buf))
 
         def worker(i, hk, kq):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
-            return compress(spec, kq, g - hk)
+            return compress(hp.spec, kq, g - hk)
 
         # skip the n gradient evaluations on rounds where everyone is busy
         c = jax.lax.cond(
@@ -146,16 +249,18 @@ def make_diana_async_step(alpha: float, gamma: float, compressor,
             lambda _: jnp.zeros((n, d), jnp.float32), None)
         msgs = {"c": c, "t": jnp.full((n,), state.k, jnp.float32)}
         buf = buffer_send(state.buf, msgs, send_mask,
-                          schedule.sample(k_tau, n), state.k)
+                          sample_delays(delay_kind, k_tau, n, ahp.tau, q),
+                          state.k)
         buf, msg, arrived = buffer_receive(buf, state.k)
 
-        h = state.h + gamma * arrived[:, None] * msg["c"]
+        h = state.h + hp.gamma * arrived[:, None] * msg["c"]
         bits = state.bits_per_node + arrived.astype(
-            state.bits_per_node.dtype) * spec_bits(spec, d)
+            state.bits_per_node.dtype) * spec_bits(hp.spec, d)
         acc_g, acc_n, g_tilde, flush, reset = fedbuff_accumulate(
-            state.acc_g, state.acc_n, msg["c"] + state.h, arrived, buffer_k)
+            state.acc_g, state.acc_n, msg["c"] + state.h, arrived,
+            ahp.buffer_k)
 
-        w = jnp.where(flush, state.w - alpha * g_tilde, state.w)
+        w = jnp.where(flush, state.w - hp.alpha * g_tilde, state.w)
         new = DianaAsyncState(w, h, state.k + 1, bits, buf,
                               reset(acc_g), reset(acc_n))
         return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
@@ -170,6 +275,59 @@ def make_diana_async_step(alpha: float, gamma: float, compressor,
     return step
 
 
+def make_diana_async_step(alpha: float, gamma: float, compressor,
+                          local_grad: Callable,
+                          schedule: StalenessSchedule, buffer_k: int,
+                          participation: float = 1.0,
+                          sampling: str = "bernoulli"):
+    """Legacy async entry point: the async sweep step specialized at the
+    concrete (cfg, schedule.tau, buffer_k) point."""
+    cfg = DianaConfig(alpha, gamma, compressor, participation, sampling)
+    ahp = DianaAsyncHParams(diana_hparams_from_config(cfg),
+                            jnp.int32(schedule.tau), jnp.float32(buffer_k))
+    sweep = make_diana_async_sweep_step(cfg, local_grad,
+                                        delay_kind=schedule.kind,
+                                        q=schedule.q)
+
+    def step(state: DianaAsyncState, key):
+        return sweep(ahp, state, key)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# FedNL
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FedNLConfig:
+    """Static structure + scalar defaults for FedNL (μ is structural: the
+    positive-definite safeguard of the projected direction)."""
+    alpha: float = 1.0
+    compressor: str = "topk0.25"
+    mu: float = 1e-3
+    participation: float = 1.0
+    sampling: str = "bernoulli"
+
+
+class FedNLHParams(NamedTuple):
+    """Traced per-round FedNL knobs — scalars or [G] sweep-axis arrays."""
+    alpha: jnp.ndarray
+    spec: CompressorSpec
+    p: Optional[jnp.ndarray] = None
+
+
+def fednl_hparams_from_config(cfg: FedNLConfig) -> FedNLHParams:
+    return FedNLHParams(jnp.float32(cfg.alpha), as_spec(cfg.compressor))
+
+
+def fednl_hparam_grid(alphas=(1.0,), fracs=(0.25,), ps=None) -> FedNLHParams:
+    """Cartesian (alpha × top-k fraction [× p]) grid, [G] leaves."""
+    from repro.core.compressors import topk_spec
+    a, f, p = _grid_axes(alphas, fracs, ps=ps)
+    return FedNLHParams(a, topk_spec(f), p)
+
+
 class FedNLState(NamedTuple):
     w: jnp.ndarray
     H: jnp.ndarray          # [n, d, d] per-worker Hessian estimates
@@ -177,22 +335,21 @@ class FedNLState(NamedTuple):
     bits_per_node: jnp.ndarray   # [n]
 
 
-def make_fednl_step(alpha: float, compressor, local_grad: Callable,
-                    local_hessian: Callable, mu: float,
-                    participation: float = 1.0, sampling: str = "bernoulli"):
-    """FedNL (option with projection/regularized direction):
+def make_fednl_sweep_step(cfg: FedNLConfig, local_grad: Callable,
+                          local_hessian: Callable):
+    """FedNL (option with projection/regularized direction), sweep-native:
     H^i_{k+1} = H^i_k + C(∇²f_i(w_k) - H^i_k);  w⁺ = w - α [H̄]_μ^{-1} ḡ."""
-    spec = as_spec(compressor)
 
-    def step(state: FedNLState, key):
+    def step(hp: FedNLHParams, state: FedNLState, key):
         n, d = state.H.shape[:2]
         k_g, k_c, k_p = jax.random.split(key, 3)
-        mask = participation_mask(k_p, n, participation, sampling)
+        mask = resolve_participation(k_p, n, cfg.participation,
+                                     cfg.sampling, hp.p)
 
         def worker(i, Hk, kc):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
             Hi = local_hessian(state.w, i)
-            D = compress(spec, kc, Hi - Hk)
+            D = compress(hp.spec, kc, Hi - Hk)
             return g, D
 
         ks = jax.random.split(k_c, n)
@@ -201,18 +358,34 @@ def make_fednl_step(alpha: float, compressor, local_grad: Callable,
         g_bar = masked_mean(g_all, mask)
         H_bar = masked_mean(H_new, mask)
         # positive-definite safeguard: H̄ + μI on the symmetric part
-        Hs = 0.5 * (H_bar + H_bar.T) + mu * jnp.eye(d)
+        Hs = 0.5 * (H_bar + H_bar.T) + cfg.mu * jnp.eye(d)
         lam, V = jnp.linalg.eigh(Hs)
-        lam = jnp.maximum(jnp.abs(lam), mu)
+        lam = jnp.maximum(jnp.abs(lam), cfg.mu)
         p = -(V @ ((V.T @ g_bar) / lam))
-        w = state.w + alpha * p
+        w = state.w + hp.alpha * p
         # uncompressed gradient + dimension-aware compressed Hessian diff
         bits = state.bits_per_node + mask.astype(
-            state.bits_per_node.dtype) * (d * 32.0 + spec_bits(spec, d * d))
+            state.bits_per_node.dtype) * (d * 32.0
+                                          + spec_bits(hp.spec, d * d))
         new = FedNLState(w, H_new, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_bar),
                      "n_active": jnp.sum(mask),
                      "bits_per_node": new.bits_per_node}
+
+    return step
+
+
+def make_fednl_step(alpha: float, compressor, local_grad: Callable,
+                    local_hessian: Callable, mu: float,
+                    participation: float = 1.0, sampling: str = "bernoulli"):
+    """Legacy entry point: the sweep step specialized at a concrete
+    hparams point — identical ops and key stream."""
+    cfg = FedNLConfig(alpha, compressor, mu, participation, sampling)
+    hp = fednl_hparams_from_config(cfg)
+    sweep = make_fednl_sweep_step(cfg, local_grad, local_hessian)
+
+    def step(state: FedNLState, key):
+        return sweep(hp, state, key)
 
     return step
 
@@ -225,25 +398,55 @@ def init_fednl(w0, n_workers):
                       jnp.zeros((n_workers,), bits_dtype()))
 
 
+# ---------------------------------------------------------------------------
+# Distributed GD
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GDConfig:
+    """Static structure + scalar defaults for uncompressed distributed GD."""
+    alpha: float = 2.0
+    participation: float = 1.0
+    sampling: str = "bernoulli"
+
+
+class GDHParams(NamedTuple):
+    """Traced per-round GD knobs — scalars or [G] sweep-axis arrays."""
+    alpha: jnp.ndarray
+    p: Optional[jnp.ndarray] = None
+
+
+def gd_hparams_from_config(cfg: GDConfig) -> GDHParams:
+    return GDHParams(jnp.float32(cfg.alpha))
+
+
+def gd_hparam_grid(alphas=(2.0,), ps=None) -> GDHParams:
+    """Cartesian (alpha [× p]) grid, [G] leaves."""
+    a, p = _grid_axes(alphas, ps=ps)
+    return GDHParams(a, p)
+
+
 class GDState(NamedTuple):
     w: jnp.ndarray
     k: jnp.ndarray
     bits_per_node: jnp.ndarray   # [n]
 
 
-def make_gd_step(alpha: float, local_grad: Callable, n_workers: int,
-                 participation: float = 1.0, sampling: str = "bernoulli"):
-    def step(state: GDState, key):
+def make_gd_sweep_step(cfg: GDConfig, local_grad: Callable, n_workers: int):
+    """Uncompressed synchronous GD, sweep-native (traced alpha and p)."""
+
+    def step(hp: GDHParams, state: GDState, key):
         d = state.w.shape[0]
         k_g, k_p = jax.random.split(key)
-        mask = participation_mask(k_p, n_workers, participation, sampling)
+        mask = resolve_participation(k_p, n_workers, cfg.participation,
+                                     cfg.sampling, hp.p)
         g_all = jax.vmap(
             lambda i: local_grad(state.w, i, jax.random.fold_in(k_g, i)))(
                 jnp.arange(n_workers))
         g = masked_mean(g_all, mask)
         bits = state.bits_per_node + mask.astype(
             state.bits_per_node.dtype) * (d * 32.0)
-        new = GDState(state.w - alpha * g, state.k + 1, bits)
+        new = GDState(state.w - hp.alpha * g, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g),
                      "n_active": jnp.sum(mask),
                      "bits_per_node": new.bits_per_node}
@@ -251,9 +454,30 @@ def make_gd_step(alpha: float, local_grad: Callable, n_workers: int,
     return step
 
 
+def make_gd_step(alpha: float, local_grad: Callable, n_workers: int,
+                 participation: float = 1.0, sampling: str = "bernoulli"):
+    """Legacy entry point: the sweep step specialized at a concrete
+    hparams point — identical ops and key stream."""
+    cfg = GDConfig(alpha, participation, sampling)
+    hp = gd_hparams_from_config(cfg)
+    sweep = make_gd_sweep_step(cfg, local_grad, n_workers)
+
+    def step(state: GDState, key):
+        return sweep(hp, state, key)
+
+    return step
+
+
 def init_gd(w0, n_workers):
     return GDState(w0.astype(jnp.float32), jnp.zeros((), jnp.int32),
                    jnp.zeros((n_workers,), bits_dtype()))
+
+
+class GDAsyncHParams(NamedTuple):
+    """Async sweep point: sync hparams + traced staleness axes."""
+    hp: GDHParams
+    tau: jnp.ndarray
+    buffer_k: jnp.ndarray
 
 
 class GDAsyncState(NamedTuple):
@@ -275,18 +499,20 @@ def init_gd_async(w0, n_workers, max_delay: int) -> GDAsyncState:
                         jnp.zeros((), jnp.float32))
 
 
-def make_gd_async_step(alpha: float, local_grad: Callable, n_workers: int,
-                       schedule: StalenessSchedule, buffer_k: int,
-                       participation: float = 1.0,
-                       sampling: str = "bernoulli"):
-    """Uncompressed GD with buffered delayed gradients — the classic
-    stale-gradient baseline the staleness ablations compare against."""
+def make_gd_async_sweep_step(cfg: GDConfig, local_grad: Callable,
+                             n_workers: int, delay_kind: str = "fixed",
+                             q: float = 0.5):
+    """Uncompressed GD with buffered delayed gradients, sweep-native — the
+    classic stale-gradient baseline with (tau, buffer_k, alpha, p) all
+    traced grid axes."""
 
-    def step(state: GDAsyncState, key):
+    def step(ahp: GDAsyncHParams, state: GDAsyncState, key):
+        hp = ahp.hp
         d = state.w.shape[0]
         k_g, k_p = jax.random.split(key)                    # == sync split
         k_tau = jax.random.fold_in(key, ASYNC_SALT)
-        mask = participation_mask(k_p, n_workers, participation, sampling)
+        mask = resolve_participation(k_p, n_workers, cfg.participation,
+                                     cfg.sampling, hp.p)
         send_mask = mask * (1.0 - buffer_busy(state.buf))
         # skip the n gradient evaluations on rounds where everyone is busy
         g_all = jax.lax.cond(
@@ -298,15 +524,16 @@ def make_gd_async_step(alpha: float, local_grad: Callable, n_workers: int,
             lambda _: jnp.zeros((n_workers, d), jnp.float32), None)
         msgs = {"g": g_all, "t": jnp.full((n_workers,), state.k, jnp.float32)}
         buf = buffer_send(state.buf, msgs, send_mask,
-                          schedule.sample(k_tau, n_workers), state.k)
+                          sample_delays(delay_kind, k_tau, n_workers,
+                                        ahp.tau, q), state.k)
         buf, msg, arrived = buffer_receive(buf, state.k)
 
         bits = state.bits_per_node + arrived.astype(
             state.bits_per_node.dtype) * (d * 32.0)
         acc_g, acc_n, g, flush, reset = fedbuff_accumulate(
-            state.acc_g, state.acc_n, msg["g"], arrived, buffer_k)
+            state.acc_g, state.acc_n, msg["g"], arrived, ahp.buffer_k)
 
-        w = jnp.where(flush, state.w - alpha * g, state.w)
+        w = jnp.where(flush, state.w - hp.alpha * g, state.w)
         new = GDAsyncState(w, state.k + 1, bits, buf,
                            reset(acc_g), reset(acc_n))
         return new, {"g_tilde_norm": jnp.linalg.norm(g),
@@ -317,5 +544,23 @@ def make_gd_async_step(alpha: float, local_grad: Callable, n_workers: int,
                      "staleness_mean": applied_staleness(state.k, msg["t"],
                                                          arrived),
                      "bits_per_node": new.bits_per_node}
+
+    return step
+
+
+def make_gd_async_step(alpha: float, local_grad: Callable, n_workers: int,
+                       schedule: StalenessSchedule, buffer_k: int,
+                       participation: float = 1.0,
+                       sampling: str = "bernoulli"):
+    """Legacy async entry point: the async sweep step specialized at the
+    concrete (cfg, schedule.tau, buffer_k) point."""
+    cfg = GDConfig(alpha, participation, sampling)
+    ahp = GDAsyncHParams(gd_hparams_from_config(cfg),
+                         jnp.int32(schedule.tau), jnp.float32(buffer_k))
+    sweep = make_gd_async_sweep_step(cfg, local_grad, n_workers,
+                                     delay_kind=schedule.kind, q=schedule.q)
+
+    def step(state: GDAsyncState, key):
+        return sweep(ahp, state, key)
 
     return step
