@@ -6,7 +6,11 @@ Figure 1/2  — FLECS vs FLECS-CGD: objective F(w_k) and ||∇F(w_k)||² versus
 Figure 3    — iterate updates: truncated inverse (Alg 4) vs FedSONIA (Alg 5).
 Claim §3    — communication complexity table:
               O(cmd + 32d + 32m²) vs O(cmd + cd + 32m²), measured.
-Comparison  — vs DIANA / FedNL / GD baselines (as the FLECS paper does).
+Comparison  — vs DIANA / FedNL / GD baselines (as the FLECS paper does),
+              plus a BUDGET-FAIR comparison: all five methods frozen at
+              the same traced per-node bit budgets (the DIANA/FedNL-style
+              x-axis) via the budget-freeze scan mode — one compiled
+              program for the whole (method × budget) figure.
 Beyond-paper — dithering-level ablation, a *vmapped* step-size x level grid
               (one compiled program for the whole grid), a partial-
               participation ablation as a TRACED Bernoulli-p sweep axis,
@@ -300,6 +304,72 @@ def participation_ablation(prob, iters=300):
             for g, p in enumerate(PARTICIPATION_PS)]
 
 
+BUDGET_GRID_MULTS = (2.0, 8.0, 32.0)
+
+
+def budget_fair_budgets(prob):
+    """The traced per-node budget grid, in multiples of one uncompressed
+    32-bit d-vector (the unit the DIANA / FedNL papers plot against)."""
+    return tuple(c * 32.0 * prob.d for c in BUDGET_GRID_MULTS)
+
+
+def budget_fair_plan(prob) -> ExperimentPlan:
+    """All five methods to the SAME traced bit budgets: five structural
+    segments × a [3] budget axis, ONE compiled program.  No per-method
+    iteration counts — each run's scan length is a spec-aware upper bound
+    (``driver.iters_for_bit_budget`` over the method's wire price) and the
+    budget-freeze scan mode equalizes the transmitted bits inside the
+    program."""
+    return ExperimentPlan(
+        problem=prob,
+        runs=(
+            MethodRun("flecs",
+                      cfg=FlecsConfig(m=1, grad_compressor="identity",
+                                      hess_compressor="dither64"),
+                      label="FLECS"),
+            MethodRun("flecs_cgd",
+                      cfg=FlecsConfig(m=1, grad_compressor="dither64",
+                                      hess_compressor="dither64"),
+                      label="FLECS-CGD"),
+            MethodRun("diana", cfg=DianaConfig(alpha=1.0, gamma=0.5,
+                                               compressor="dither64"),
+                      label="DIANA"),
+            MethodRun("fednl", cfg=FedNLConfig(alpha=1.0,
+                                               compressor="topk0.25",
+                                               mu=prob.mu),
+                      label="FedNL"),
+            MethodRun("gd", cfg=GDConfig(alpha=2.0), label="GD"),
+        ),
+        bit_budget=budget_fair_budgets(prob))
+
+
+def budget_fair_comparison(prob):
+    """The paper's headline axis, made fair: objective reached per
+    transmitted bit, every method frozen at the same traced budgets.
+    Asserts the figure compiled ONCE, that every (method, budget) point
+    actually reached its budget, and that the frozen-tail ledger rows are
+    bit-stable (the freeze charged nothing after exhaustion)."""
+    budgets = budget_fair_budgets(prob)
+    res = assert_one_compile(lambda: run_plan(budget_fair_plan(prob)))
+    rows = []
+    for lab in res.labels:
+        tr = res.traces[lab]
+        bits = np.asarray(tr["bits_per_node"])          # [B, T, n]
+        for b, budget in enumerate(budgets):
+            ledger = np.max(bits[b], axis=1)            # [T] max-worker bits
+            reached = np.flatnonzero(ledger >= budget)
+            assert reached.size, (lab, budget, float(ledger[-1]))
+            rounds = int(reached[0]) + 1                # live rounds run
+            assert np.all(ledger[rounds - 1:] == ledger[rounds - 1]), \
+                (lab, budget)                           # bit-stable tail
+            rows.append({"method": lab, "budget": float(budget),
+                         "F": float(tr["F"][b, -1]),
+                         "grad_sq": float(tr["grad_sq"][b, -1]),
+                         "bits_per_node": float(ledger[-1]),
+                         "rounds": rounds})
+    return rows
+
+
 def ablation_grid_plan(prob, iters=200) -> ExperimentPlan:
     """The (grad_s x hess_s x beta) cube as an ExperimentPlan (one
     flecs_cgd segment, eight traced grid points)."""
@@ -399,9 +469,11 @@ def staleness_ablation(prob, iters=600):
 
 
 def run_plans(prob, csv_rows: list, iters=200):
-    """The plan-lowered comparison figures (fig1 + participation) — ONE
-    compiled program each, asserted via ``api.plan_compiles()``.  Shared by
-    the full benchmark run and the CI plan-smoke job."""
+    """The plan-lowered comparison figures (fig1 + participation +
+    budget_fair) — ONE compiled program each, asserted via
+    ``api.plan_compiles()``.  Shared by the full benchmark run and the CI
+    plan-smoke job (whose JSONs feed the scripts/check_bench_drift.py
+    regression gate)."""
     OUT.mkdir(exist_ok=True)
     res1, us1 = fig1_flecs_vs_cgd(prob, iters=iters)
     json.dump(res1, open(OUT / "fig1_flecs_vs_cgd.json", "w"), indent=1)
@@ -427,7 +499,18 @@ def run_plans(prob, csv_rows: list, iters=200):
               f"active/round={r['active_mean']:.1f}")
         csv_rows.append((f"participation/p{r['p']}", 0.0,
                          f"F={r['F']:.5f};Mbits={r['Mbits_mean']:.2f}"))
-    return res1, part
+
+    bud = budget_fair_comparison(prob)
+    json.dump(bud, open(OUT / "budget_fair.json", "w"), indent=1)
+    print("\n=== Budget-fair comparison: five methods x traced bit-budget "
+          "grid, ONE program ===")
+    for r in bud:
+        print(f"  {r['method']:10s} budget={r['budget'] / 1e3:8.1f}kb: "
+              f"F={r['F']:.5f} rounds={r['rounds']:4d} "
+              f"bits/node={r['bits_per_node'] / 1e3:8.1f}kb")
+        csv_rows.append((f"budget_fair/{r['method']}@{r['budget']:.0f}", 0.0,
+                         f"F={r['F']:.5f};rounds={r['rounds']}"))
+    return res1, part, bud
 
 
 def run_grids(prob, csv_rows: list, iters_sync=200, iters_async=600):
@@ -460,7 +543,7 @@ def run(csv_rows: list):
     OUT.mkdir(exist_ok=True)
     prob = make_problem(d=123, n_workers=20, r=64, mu=1e-3, seed=0)
 
-    res1, part = run_plans(prob, csv_rows, iters=300)
+    res1, part, _ = run_plans(prob, csv_rows, iters=300)
     # headline check: for the same iterate count CGD ships fewer bits
     f_cgd = res1["FLECS-CGD-m1"][-1]
     f_fl = res1["FLECS-m1"][-1]
@@ -531,16 +614,17 @@ def run(csv_rows: list):
 def main():
     """Standalone entry for the CI smoke jobs: --grids-only runs the two
     traced-spec ablation grids, --plans-only runs the plan-lowered
-    comparison figures (fig1 + participation, ONE compile each, asserted)
-    — both at toy size, landing JSONs in benchmarks/out/ (uploaded as CI
-    artifacts)."""
+    comparison figures (fig1 + participation + budget_fair, ONE compile
+    each, asserted) — both at toy size, landing JSONs in benchmarks/out/
+    (uploaded as CI artifacts and diffed against the committed goldens by
+    scripts/check_bench_drift.py)."""
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--grids-only", action="store_true",
                     help="run only ablation_grid + async_grid")
     ap.add_argument("--plans-only", action="store_true",
-                    help="run only the run_plan figures "
-                         "(fig1 + participation_ablation)")
+                    help="run only the run_plan figures (fig1 + "
+                         "participation_ablation + budget_fair_comparison)")
     ap.add_argument("--d", type=int, default=123,
                     help="problem size (with --grids-only/--plans-only)")
     ap.add_argument("--workers", type=int, default=20)

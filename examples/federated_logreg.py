@@ -13,6 +13,8 @@ regardless of how many methods or participation levels are requested.
         --participation 1.0,0.5,0.25          # traced sweep axis, ONE compile
     PYTHONPATH=src python examples/federated_logreg.py --staleness 2 \
         --delay-kind geometric --participation 0.5
+    PYTHONPATH=src python examples/federated_logreg.py \
+        --bit-budget 200000                   # budget-fair: equal bits/node
 
 --method selects one registry method ("all", the default, compares every
 one).  --participation is SWEEPABLE: a comma-list becomes a traced
@@ -20,6 +22,15 @@ Bernoulli-p hparam axis — all levels for all methods still execute as one
 compiled program (the per-p rows print separately).  Single values < 1 use
 the --sampling kind ("choice" = exact-k, static); comma-lists require
 bernoulli, the traced form.
+
+With --bit-budget BITS > 0 the comparison is budget-fair instead of
+rounds-fair: every method runs until its cumulative per-node uplink ledger
+reaches BITS and then freezes (``driver.freeze_on_bit_budget`` — the
+traced budget is a sweep axis, so it is STILL one compiled program), with
+each run's scan length a spec-aware upper bound from
+``driver.iters_for_bit_budget``.  This reproduces the communicated-bits
+x-axis the paper's headline claim lives on: FLECS-CGD wins per transmitted
+bit, not per round.
 
 With --staleness TAU > 0 the flecs/flecs_cgd/diana/gd rows switch to the
 FedBuff-style async engine: updates arrive TAU rounds late (per
@@ -76,6 +87,7 @@ def build_runs(args, prob, ps, alphas):
         print("(FedNL skipped: no async variant)")
         names = tuple(n for n in names if n != "fednl")
 
+    budgeted = args.bit_budget > 0
     runs = []
     for name in names:
         if name in ("flecs", "flecs_cgd"):
@@ -101,19 +113,31 @@ def build_runs(args, prob, ps, alphas):
             gd_alpha = 2.0 if args.staleness == 0 else 1.0
             cfg = GDConfig(alpha=gd_alpha, **static)
             hp = GDHParams(full(gd_alpha), p_axis)
-        iters = min(args.iters, 80) if name == "fednl" else args.iters
+        # budget-fair mode derives each run's scan length from its wire
+        # price (driver.iters_for_bit_budget) — the freeze, not the round
+        # count, equalizes the methods
+        iters = (None if budgeted
+                 else min(args.iters, 80) if name == "fednl" else args.iters)
         runs.append(MethodRun(name, cfg=cfg, hparams=hp, iters=iters))
     return runs
 
 
-def print_rows(res, ps):
+def print_rows(res, ps, budget=0.0):
     for lab in res.labels:
         st, tr = res[lab]
         for g, p in enumerate(ps):
             F = float(tr["F"][g, -1])
             gn = float(jnp.sqrt(tr["grad_sq"][g, -1]))
             mbits = float(jnp.max(st.bits_per_node[g])) / 1e6
-            active = float(jnp.mean(tr["n_active"][g]))
+            # budget mode: the scan length is an upper bound and frozen
+            # rows report zero activity — average over the LIVE rounds
+            # (up to the row the ledger reached the budget) so the stat
+            # reflects actual per-round participation
+            ledger = jnp.max(tr["bits_per_node"][g], axis=-1)
+            live = (int(jnp.argmax(ledger >= budget)) + 1
+                    if budget > 0 and bool(jnp.any(ledger >= budget))
+                    else ledger.shape[0])
+            active = float(jnp.mean(tr["n_active"][g, :live]))
             name = lab if len(ps) == 1 else f"{lab}@p={p}"
             line = (f"{name:18s} F={F:.6f} ||grad||={gn:.2e} "
                     f"Mbits/node={mbits:7.3f} active/round={active:5.1f}")
@@ -152,6 +176,13 @@ def main():
                     help="derive the step size via driver.damped_alpha "
                          "(alpha0=1, scaled by p·K/n) instead of the "
                          "hand-tuned per-mode defaults")
+    ap.add_argument("--bit-budget", type=float, default=0.0, metavar="BITS",
+                    help="budget-fair mode: freeze every method once its "
+                         "per-node uplink ledger reaches BITS (still one "
+                         "compiled program; scan lengths become spec-aware "
+                         "upper bounds via driver.iters_for_bit_budget and "
+                         "--iters is ignored).  0 = rounds-fair, the "
+                         "default")
     args = ap.parse_args()
 
     ps = tuple(float(p) for p in args.participation.split(","))
@@ -182,12 +213,19 @@ def main():
         iters=args.iters,
         staleness=(StalenessSchedule(args.delay_kind, tau=tau)
                    if tau > 0 else None),
-        buffer_k=K)
+        buffer_k=K,
+        bit_budget=args.bit_budget if args.bit_budget > 0 else None)
     res = run_plan(plan)
     assert api.plan_compiles() == api.plan_programs() == 1, \
         "the example must lower to exactly one compiled program"
-    print_rows(res, ps)
+    print_rows(res, ps, budget=args.bit_budget)
     n_traj = sum(len(ps) for _ in res.labels)
+    if args.bit_budget > 0:
+        print(f"(budget-fair: trajectories freeze once their ledger reaches "
+              f"{args.bit_budget:.0f} bits/node; the Mbits/node column is "
+              f"the ACTUAL final ledger — a method whose single-round wire "
+              f"price exceeds the budget overshoots by up to one round, "
+              f"e.g. FedNL's d^2 payload on small budgets)")
     print(f"({n_traj} trajectories, 1 compiled program)")
 
 

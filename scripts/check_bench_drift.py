@@ -1,0 +1,127 @@
+"""Benchmark regression gate: diff CI-produced benchmark JSONs against goldens.
+
+The CI smoke jobs run the grid/plan figures at a pinned toy size with pinned
+seeds.  Values derived from exact wire arithmetic -- per-node bit ledgers,
+budget-freeze round counts, grid axes, damped step sizes -- must match the
+committed goldens EXACTLY: silent drift there means the accounting or the
+engine semantics changed.  Two key classes compare under a relative tolerance
+instead: the objective keys (F, grad_sq), which run through eigh/BLAS kernels
+that legitimately differ across jax versions/platforms, and the sampled-cohort
+statistics (active_mean, Mbits_mean, flushes), which depend on the PRNG bit
+stream that jax does not guarantee stable across releases (the jax-latest
+matrix entry is unpinned).  If a future jax release does reshuffle the stream
+enough to push even tolerant keys out of range, rerun the smoke commands from
+.github/workflows/ci.yml and refresh with --update.
+
+Usage (the CI gate)::
+
+    python scripts/check_bench_drift.py --golden benchmarks/out/golden \\
+        --out benchmarks/out ablation_grid.json async_grid.json \\
+        fig1_flecs_vs_cgd.json participation.json budget_fair.json
+
+Refresh the goldens after an INTENTIONAL numeric change (rerun the smoke
+commands from .github/workflows/ci.yml first, then commit the result)::
+
+    python scripts/check_bench_drift.py --update ...same files...
+"""
+
+import argparse
+import json
+import shutil
+import sys
+from pathlib import Path
+
+TOLERANT_KEYS = {"F", "grad_sq", "active_mean", "Mbits_mean", "flushes"}
+
+
+def _compare(path, key, golden, fresh, rtol, atol, errors):
+    """Recursively diff ``fresh`` against ``golden``, appending messages."""
+    if isinstance(golden, dict):
+        if not isinstance(fresh, dict):
+            errors.append(f"{path}: expected an object")
+            return
+        for k in sorted(set(golden) | set(fresh)):
+            if k not in golden:
+                errors.append(f"{path}.{k}: not in golden")
+            elif k not in fresh:
+                errors.append(f"{path}.{k}: missing from output")
+            else:
+                _compare(f"{path}.{k}", k, golden[k], fresh[k], rtol, atol, errors)
+        return
+    if isinstance(golden, list):
+        if not isinstance(fresh, list):
+            errors.append(f"{path}: expected an array")
+            return
+        if len(golden) != len(fresh):
+            errors.append(f"{path}: length {len(fresh)} != golden {len(golden)}")
+            return
+        for i, (g, f) in enumerate(zip(golden, fresh)):
+            _compare(f"{path}[{i}]", key, g, f, rtol, atol, errors)
+        return
+    numeric = isinstance(golden, (int, float)) and not isinstance(golden, bool)
+    fresh_numeric = isinstance(fresh, (int, float)) and not isinstance(fresh, bool)
+    if not numeric or not fresh_numeric:
+        if golden != fresh:
+            errors.append(f"{path}: {fresh!r} != golden {golden!r}")
+        return
+    if key in TOLERANT_KEYS:
+        if abs(fresh - golden) > atol + rtol * abs(golden):
+            errors.append(f"{path}: {fresh!r} drifted from {golden!r} (rtol={rtol})")
+        return
+    if fresh != golden:
+        errors.append(f"{path}: {fresh!r} != golden {golden!r} (exact-match key)")
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="diff benchmark JSONs against committed goldens"
+    )
+    ap.add_argument("files", nargs="+", help="JSON file names to compare")
+    ap.add_argument("--out", default="benchmarks/out", help="fresh benchmark JSONs")
+    ap.add_argument("--golden", default="benchmarks/out/golden", help="goldens dir")
+    ap.add_argument("--rtol", type=float, default=5e-2, help="tolerance for F keys")
+    ap.add_argument("--atol", type=float, default=1e-8)
+    ap.add_argument(
+        "--update", action="store_true", help="refresh goldens instead of comparing"
+    )
+    args = ap.parse_args()
+    out, golden = Path(args.out), Path(args.golden)
+
+    if args.update:
+        golden.mkdir(parents=True, exist_ok=True)
+        for name in args.files:
+            shutil.copy2(out / name, golden / name)
+            print(f"updated {golden / name}")
+        return 0
+
+    failed = False
+    for name in args.files:
+        gpath, fpath = golden / name, out / name
+        if not gpath.exists():
+            print(f"FAIL {name}: no golden at {gpath} (create with --update)")
+            failed = True
+            continue
+        if not fpath.exists():
+            print(f"FAIL {name}: benchmark output {fpath} was not produced")
+            failed = True
+            continue
+        with open(gpath) as fh:
+            gold = json.load(fh)
+        with open(fpath) as fh:
+            cand = json.load(fh)
+        errors = []
+        _compare(name, "", gold, cand, args.rtol, args.atol, errors)
+        if errors:
+            failed = True
+            print(f"FAIL {name}: {len(errors)} drifting value(s)")
+            for e in errors[:20]:
+                print(f"  {e}")
+            if len(errors) > 20:
+                print(f"  ... and {len(errors) - 20} more")
+        else:
+            print(f"ok   {name}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

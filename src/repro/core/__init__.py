@@ -17,24 +17,26 @@ import; import it explicitly.
 """
 from repro.core.compressors import (Compressor, CompressorSpec, compress,
                                     get_compressor, psum_level_cap,
-                                    spec_bits, spec_from_name, spec_omega,
-                                    stack_specs)
-from repro.core.driver import (damped_alpha, participation_mask,
-                               resolve_participation, run_async_sweep,
-                               run_experiment, run_sweep, sweep_keys,
-                               sweep_program)
+                                    spec_bits, spec_bits_many,
+                                    spec_from_name, spec_omega, stack_specs)
+from repro.core.driver import (damped_alpha, freeze_on_bit_budget,
+                               hparams_bit_budget, iters_for_bit_budget,
+                               participation_mask, resolve_participation,
+                               run_async_sweep, run_experiment, run_sweep,
+                               sweep_keys, sweep_program)
 from repro.core.flecs import (FlecsAsyncHParams, FlecsConfig, FlecsHParams,
                               FlecsState, async_hparam_grid, bits_per_round,
-                              hparam_grid, init_state, make_flecs_step,
-                              make_flecs_sweep_step)
+                              hparam_grid, hparams_round_bits, init_state,
+                              make_flecs_step, make_flecs_sweep_step)
 from repro.core.sketch import sketch
 
 __all__ = ["Compressor", "CompressorSpec", "compress", "get_compressor",
-           "psum_level_cap", "spec_bits", "spec_from_name", "spec_omega",
-           "stack_specs",
+           "psum_level_cap", "spec_bits", "spec_bits_many", "spec_from_name",
+           "spec_omega", "stack_specs",
            "FlecsAsyncHParams", "FlecsConfig", "FlecsHParams", "FlecsState",
            "async_hparam_grid", "bits_per_round", "damped_alpha",
-           "hparam_grid", "init_state", "make_flecs_step",
-           "make_flecs_sweep_step", "participation_mask",
+           "freeze_on_bit_budget", "hparam_grid", "hparams_bit_budget",
+           "hparams_round_bits", "init_state", "iters_for_bit_budget",
+           "make_flecs_step", "make_flecs_sweep_step", "participation_mask",
            "resolve_participation", "run_async_sweep", "run_experiment",
            "run_sweep", "sketch", "sweep_keys", "sweep_program"]

@@ -24,6 +24,14 @@ module makes a whole comparison figure a single declarative object:
   ``run_sweep``), and all of them are composed inside a single ``jax.jit``
   — so a figure that previously compiled 8 programs (fig1: 4 sketch sizes
   × 2 methods) compiles exactly one, with the method axis traced.
+* ``ExperimentPlan.bit_budget`` — budget-fair comparisons: a (grid of)
+  per-node uplink bit budget(s) crossed with every run's hparam axis
+  (:func:`cross_bit_budget`) and enforced by the budget-freeze scan mode
+  (``driver.freeze_on_bit_budget``): each grid point steps until its
+  cumulative ledger reaches its traced budget, then lax.select-freezes —
+  equal transmitted bits across methods with different wire prices, still
+  ONE compiled program, with scan lengths auto-derived from the methods'
+  ``round_bits`` price queries (``driver.iters_for_bit_budget``).
 
 Key streams (reproducibility contract): run ``j`` of a plan sweeps with
 ``fold_in(key(plan.seed), j)``, and its grid point ``g`` consumes the
@@ -80,7 +88,9 @@ import numpy as np
 
 from repro.core import flecs
 from repro.core.compressors import spec_from_name
-from repro.core.driver import (StalenessSchedule, sweep_keys, sweep_program)
+from repro.core.driver import (StalenessSchedule, bits_dtype,
+                               hparams_bit_budget, iters_for_bit_budget,
+                               sweep_keys, sweep_program)
 from repro.optim import baselines
 
 
@@ -106,6 +116,11 @@ class MethodSpec:
                      engine (None => the method has no async variant);
                      ``async_wrap(hp, tau, buffer_k)`` broadcasts the
                      traced staleness axes over the grid.
+    round_bits:      (problem, cfg, hp) -> per-participating-worker uplink
+                     bits of one round at each grid point ([G]) — the
+                     spec-aware wire-price query ``plan.bit_budget`` uses
+                     to choose scan lengths (None => budget plans must
+                     pass ``run.iters`` explicitly).
     """
     name: str
     config_cls: type
@@ -117,6 +132,7 @@ class MethodSpec:
     init_async: Optional[Callable] = None
     async_sweep_step: Optional[Callable] = None
     async_wrap: Optional[Callable] = None
+    round_bits: Optional[Callable] = None
 
 
 def _broadcast(hp, tau, buffer_k, wrapper):
@@ -209,6 +225,8 @@ def _flecs_spec(name: str, default_grad: str) -> MethodSpec:
                                               delay_kind=kind, q=q),
         async_wrap=lambda hp, tau, K: _broadcast(
             hp, tau, K, flecs.FlecsAsyncHParams),
+        round_bits=lambda prob, cfg, hp: flecs.hparams_round_bits(
+            cfg, hp, prob.d),
     )
 
 
@@ -259,6 +277,8 @@ register_method(MethodSpec(
             cfg, prob.make_oracles()[0], delay_kind=kind, q=q),
     async_wrap=lambda hp, tau, K: _broadcast(
         hp, tau, K, baselines.DianaAsyncHParams),
+    round_bits=lambda prob, cfg, hp: baselines.diana_round_bits(
+        cfg, hp, prob.d),
 ))
 
 register_method(MethodSpec(
@@ -270,6 +290,8 @@ register_method(MethodSpec(
         cfg, prob.make_oracles()[0], _local_hessian(prob)),
     grid=baselines.fednl_hparam_grid,
     from_config=baselines.fednl_hparams_from_config,
+    round_bits=lambda prob, cfg, hp: baselines.fednl_round_bits(
+        cfg, hp, prob.d),
 ))
 
 register_method(MethodSpec(
@@ -289,6 +311,8 @@ register_method(MethodSpec(
             delay_kind=kind, q=q),
     async_wrap=lambda hp, tau, K: _broadcast(
         hp, tau, K, baselines.GDAsyncHParams),
+    round_bits=lambda prob, cfg, hp: baselines.gd_round_bits(
+        cfg, hp, prob.d),
 ))
 
 
@@ -327,6 +351,19 @@ class ExperimentPlan:
                  engine (methods without one — FedNL — fail loudly), with
                  ``buffer_k`` the FedBuff flush threshold broadcast over
                  each run's grid.
+    bit_budget:  a per-node uplink bit budget (scalar) or a budget GRID
+                 (sequence) — budget-fair mode.  The axis is crossed with
+                 every run's hparam grid (point ``b*G + g`` pairs budget b
+                 with grid point g) and traced through the budget-freeze
+                 scan mode (``driver.freeze_on_bit_budget``): each point
+                 steps until its cumulative ledger reaches its budget,
+                 then freezes — so methods with different wire prices run
+                 "to the same budget" inside the plan's single compiled
+                 program.  Runs without an explicit ``iters`` get a
+                 spec-aware upper-bound scan length from
+                 ``driver.iters_for_bit_budget`` (prices via each method's
+                 ``round_bits`` query, stretched by 1/p_min for client
+                 sampling and (tau+1) for async arrival billing).
     """
     problem: Any
     runs: Sequence[MethodRun]
@@ -337,6 +374,7 @@ class ExperimentPlan:
     record: Optional[Callable] = None
     staleness: Optional[StalenessSchedule] = None
     buffer_k: float = 1.0
+    bit_budget: Any = None
 
 
 @dataclasses.dataclass
@@ -399,6 +437,58 @@ def _validate_p(spec: MethodSpec, cfg, hp) -> None:
             f"{np.asarray(p)}")
 
 
+def cross_bit_budget(hp, budgets):
+    """Cross a [B] bit-budget axis with an hparam grid's [G] points.
+
+    Returns (hparams', budgets') with [B*G] leaves: point ``b*G + g``
+    pairs ``budgets[b]`` with grid point g.  Works on sync and async
+    hparam pytrees — the budget always lands on the sync hparams'
+    ``bit_budget`` slot, where ``driver.freeze_on_bit_budget`` reads it.
+    Budgets are cast to ``driver.bits_dtype()`` to match the ledger they
+    gate (f32 loses integer bit counts past 2^24 — reachable on the
+    d=20958 problems, which is why the ledgers go f64 under x64).
+    """
+    budgets = jnp.atleast_1d(jnp.asarray(budgets, bits_dtype()))
+    G = _grid_size(hp)
+    tiled = jax.tree.map(
+        lambda a: jnp.tile(a, (budgets.shape[0],) + (1,) * (a.ndim - 1)), hp)
+    bud = jnp.repeat(budgets, G)
+    if hasattr(tiled, "bit_budget"):
+        return tiled._replace(bit_budget=bud), bud
+    inner = getattr(tiled, "hp", None)
+    if inner is not None and hasattr(inner, "bit_budget"):
+        return tiled._replace(hp=inner._replace(bit_budget=bud)), bud
+    raise ValueError(
+        f"hparams {type(hp).__name__} carry no bit_budget slot")
+
+
+def _budget_scan_len(spec: MethodSpec, plan: ExperimentPlan, cfg, hp,
+                     bud) -> int:
+    """Spec-aware upper bound on the rounds a budget run can charge:
+    ``iters_for_bit_budget`` over the (budget × wire-price) grid,
+    stretched by 1/p_min under client sampling (a worker only pays on
+    sampled rounds) and by (tau+1) for async arrival billing
+    (busy-exclusion spaces a worker's messages tau+1 rounds apart) —
+    exact for full-participation sync runs, a heuristic bound for the
+    stochastic cases (pin ``run.iters`` to override)."""
+    sync = getattr(hp, "hp", hp)
+    if spec.round_bits is None:
+        raise ValueError(
+            f"method {spec.name!r} has no round_bits price query; pass "
+            "run.iters explicitly to combine it with plan.bit_budget")
+    prices = np.asarray(spec.round_bits(plan.problem, cfg, sync), float)
+    iters = iters_for_bit_budget(np.asarray(bud), prices)
+    p_axis = getattr(sync, "p", None)
+    p_min = (float(np.min(np.asarray(p_axis))) if p_axis is not None
+             else float(getattr(cfg, "participation", 1.0)))
+    if p_min < 1.0:
+        iters = int(np.ceil(iters / p_min))
+    if hasattr(hp, "tau"):
+        tau_max = int(jnp.max(hp.tau))
+        iters = iters * (tau_max + 1) + tau_max
+    return iters
+
+
 def _resolve(plan: ExperimentPlan, run: MethodRun):
     spec = run.method if isinstance(run.method, MethodSpec) else get_method(
         run.method)
@@ -412,7 +502,18 @@ def _resolve(plan: ExperimentPlan, run: MethodRun):
         hp = jax.tree.map(lambda a: jnp.asarray(a)[None],
                           spec.from_config(cfg))
     _validate_p(spec, cfg, hp)
-    iters = run.iters if run.iters is not None else plan.iters
+    bud = None
+    if plan.bit_budget is not None:
+        if hparams_bit_budget(hp) is not None:
+            raise ValueError(
+                f"run {spec.name!r}: hparams already carry a bit_budget "
+                "axis — drop plan.bit_budget or the hparams axis")
+        budgets = np.atleast_1d(np.asarray(plan.bit_budget, np.float64))
+        if budgets.ndim != 1 or np.any(budgets <= 0):
+            raise ValueError(
+                "plan.bit_budget must be a positive scalar or a 1-D grid "
+                f"of positive budgets, got {np.asarray(plan.bit_budget)}")
+        hp, bud = cross_bit_budget(hp, budgets)
     n = plan.problem.n_workers
     if plan.staleness is not None:
         if spec.async_sweep_step is None:
@@ -442,6 +543,17 @@ def _resolve(plan: ExperimentPlan, run: MethodRun):
                 "sync hparams")
         step = spec.sweep_step(plan.problem, cfg)
         state = spec.init(plan.problem, n, cfg)
+    if run.iters is not None:
+        iters = run.iters
+    elif bud is not None:
+        # budget-fair mode: the scan length is a spec-aware upper bound,
+        # NOT a per-method round count — the traced freeze equalizes the
+        # actual budgets inside the program
+        iters = _budget_scan_len(spec, plan, cfg, hp, bud)
+        if plan.record_every > 1:
+            iters = -(-iters // plan.record_every) * plan.record_every
+    else:
+        iters = plan.iters
     return spec, cfg, hp, step, state, iters
 
 

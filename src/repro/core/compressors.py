@@ -197,6 +197,17 @@ def spec_bits(spec: CompressorSpec, d) -> jnp.ndarray:
          lambda: kept * (32.0 + jnp.ceil(jnp.log2(jnp.maximum(d, 1.0))))))
 
 
+def spec_bits_many(spec: CompressorSpec, d) -> jnp.ndarray:
+    """:func:`spec_bits` for a STACKED spec whose leaves carry a leading
+    [G] grid axis — the per-point wire-price query behind plan-level bit
+    budgets (``lax.switch`` needs a scalar family id, so a grid-stacked
+    spec is vmapped over its axis).  Scalar specs pass straight through,
+    so callers can price any hparam pytree uniformly."""
+    if jnp.ndim(spec.family) == 0:
+        return spec_bits(spec, d)
+    return jax.vmap(lambda s: spec_bits(s, d))(spec)
+
+
 def spec_omega(spec: CompressorSpec, d) -> jnp.ndarray:
     """Variance bound ω of Definition 3 (0 for identity; top-k is a biased
     contraction, not in U(ω) — reported as 0 and flagged by ``unbiased``)."""

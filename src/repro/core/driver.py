@@ -34,6 +34,13 @@ site.  This module replaces all of those loops with **one** compiled
   communication bits that round.  The Bernoulli probability may itself be
   a **traced** sweep axis (see :func:`resolve_participation`), so a
   participation ablation is one vmapped program, not a Python loop.
+* :func:`freeze_on_bit_budget` — the budget-freeze scan mode behind
+  plan-level bit budgets: hparams carrying a traced ``bit_budget`` run
+  until their cumulative per-node bits reach it, then the whole state
+  lax.select-freezes (no more iterate motion, no more bits charged) — so
+  methods with *different wire prices* run "to the same budget" inside
+  one fixed-length compiled program.  :func:`sweep_program` applies it
+  automatically; :func:`iters_for_bit_budget` picks the scan length.
 
 Buffered / asynchronous aggregation (FedBuff-style staleness)
 -------------------------------------------------------------
@@ -87,6 +94,7 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def bits_dtype():
@@ -480,10 +488,15 @@ def sweep_program(sweep_step: Callable, iters: int,
     ``run_plan`` composes several of these (one per structurally distinct
     method segment) into ONE jitted program — the one-compile-per-figure
     invariant.
+
+    Hparams carrying a traced ``bit_budget`` run in the budget-freeze
+    scan mode (:func:`freeze_on_bit_budget`); budget-less hparams are
+    untouched.
     """
     if record_every != 1 and (record_every < 1 or iters % record_every):
         raise ValueError(
             f"record_every={record_every} must divide iters={iters}")
+    sweep_step = freeze_on_bit_budget(sweep_step)
 
     def one(hp, state, ks):
         body = _scan_body(lambda st, k: sweep_step(hp, st, k), record,
@@ -558,12 +571,101 @@ def run_async_sweep(sweep_step: Callable, hparams, state, key, iters: int,
                      record_every=record_every, trace_dtype=trace_dtype)
 
 
-def iters_for_bit_budget(budget: float, bits_per_round: float) -> int:
-    """Smallest round count whose cumulative per-node bits reach ``budget``.
+# ---------------------------------------------------------------------------
+# Bit budgets: the budget-freeze scan mode
+# ---------------------------------------------------------------------------
 
-    Per-round bits are deterministic for every method here, so a
-    while-on-bits Python loop is equivalent to a fixed-length scan of this
-    many rounds (full participation).
+def hparams_bit_budget(hp):
+    """The traced per-point bit budget carried by an hparam pytree, or
+    None.  Sync hparams carry it as a ``bit_budget`` field; async hparams
+    (``FlecsAsyncHParams`` and friends) carry it on their inner sync
+    ``hp`` — the budget gates *arrival-billed* bits the same way."""
+    budget = getattr(hp, "bit_budget", None)
+    if budget is None:
+        inner = getattr(hp, "hp", None)
+        if inner is not None:
+            budget = getattr(inner, "bit_budget", None)
+    return budget
+
+
+# Aux trace keys zeroed on frozen rounds: once the budget is exhausted
+# nothing is sent, arrives, flushes, aggregates, or moves — the discarded
+# step's diagnostics (gradient/direction norms) must not leak into the
+# frozen tail next to the zeroed activity counters.
+_FROZEN_ZERO_KEYS: Sequence[str] = ("n_active", "n_arrived", "flushed",
+                                    "staleness_mean", "g_tilde_norm",
+                                    "dir_norm")
+
+
+def freeze_on_bit_budget(sweep_step: Callable) -> Callable:
+    """Budget-freeze scan mode: wrap a sweep step so that once a grid
+    point's cumulative per-node bits (``max_i state.bits_per_node[i]``)
+    reach its traced ``bit_budget``, the ENTIRE state lax.select-freezes
+    against the previous round and no further bits are charged.
+
+    Semantics (what the tests pin): with per-round price ``c`` a budget
+    ``B`` runs exactly ``iters_for_bit_budget(B, c)`` live rounds — rounds
+    step while ``max bits < B`` — and every later round is a frozen no-op,
+    so a T-round budget run is the matching truncated run padded with
+    bit-stable rows.  Methods with different wire prices therefore run "to
+    the same budget" inside ONE fixed-length compiled program: the budget
+    is a traced vmappable axis, not a per-method iteration count.
+
+    Applied automatically by :func:`sweep_program`; hparams without a
+    budget (``bit_budget is None``, the default everywhere) pass through
+    untouched — same ops, same traces, zero overhead.
     """
-    import math
-    return max(1, math.ceil(budget / bits_per_round))
+    def step(hp, state, key):
+        budget = hparams_bit_budget(hp)
+        if budget is None:
+            return sweep_step(hp, state, key)
+        bits = getattr(state, "bits_per_node", None)
+        if bits is None:
+            raise ValueError(
+                "bit_budget requires a state carrying a bits_per_node "
+                f"ledger, got {type(state).__name__}")
+        active = jnp.max(bits) < budget
+        new_state, aux = sweep_step(hp, state, key)
+        sel = lambda new, old: jnp.where(active, new, old)     # noqa: E731
+        frozen = jax.tree.map(sel, new_state, state)
+        if isinstance(aux, dict):
+            aux = dict(aux)
+            if "bits_per_node" in aux:
+                aux["bits_per_node"] = frozen.bits_per_node
+            if "buffered" in aux and hasattr(frozen, "acc_n"):
+                aux["buffered"] = frozen.acc_n
+            for k in _FROZEN_ZERO_KEYS:
+                if k in aux:
+                    aux[k] = sel(aux[k], jnp.zeros_like(aux[k]))
+        return frozen, aux
+
+    return step
+
+
+def iters_for_bit_budget(budget, bits_per_round) -> int:
+    """Upper-bound scan length of a budget run: the smallest round count
+    whose cumulative per-node bits reach ``budget``, maxed over a grid.
+
+    ``bits_per_round`` is the spec-aware per-participating-worker price of
+    one round (``flecs.hparams_round_bits``, the registry ``round_bits``
+    queries, or ``compressors.spec_bits`` directly — dimension-aware for
+    top-k).  Both arguments may be [G] arrays (a budget × price grid); the
+    bound then covers every point, which is how a whole budget-fair plan
+    shares one scan length per structural segment.  A zero or sub-round
+    budget yields 1: a scan needs at least one round, and the freeze gate
+    (:func:`freeze_on_bit_budget`) holds / charges that round as the
+    budget dictates.
+
+    The bound is exact under full participation with synchronous billing
+    (every round charges the max-bits worker the full price).  Client
+    sampling and async arrival billing stretch the charging cadence —
+    ``repro.core.api``'s plan lowering scales the bound by 1/p_min and
+    (tau + 1) for those axes.
+    """
+    budget = np.asarray(budget, dtype=float)
+    price = np.asarray(bits_per_round, dtype=float)
+    if budget.size == 0 or price.size == 0:
+        raise ValueError("empty bit-budget/price grid")
+    if np.any(price <= 0):
+        raise ValueError(f"bits_per_round must be > 0, got {price}")
+    return max(1, int(np.ceil(np.max(budget / price))))

@@ -74,7 +74,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import (CompressorSpec, compress, dither_spec,
-                                    spec_bits, spec_from_name)
+                                    spec_bits, spec_bits_many,
+                                    spec_from_name)
 from repro.core.directions import (fedsonia_direction,
                                    truncated_inverse_direction,
                                    truncated_inverse_direction_floored)
@@ -126,6 +127,13 @@ class FlecsHParams(NamedTuple):
                   (None is an empty pytree leaf, so pre-axis grids are
                   untouched; a traced p axis requires bernoulli sampling —
                   see ``driver.resolve_participation``)
+      bit_budget — per-node uplink bit budget, or None for an unbounded
+                  run.  A traced budget switches the sweep into the
+                  budget-freeze scan mode (``driver.freeze_on_bit_budget``):
+                  the state lax.select-freezes once the cumulative ledger
+                  reaches it, so budget-fair comparisons are ONE fixed-
+                  length program (``api.ExperimentPlan.bit_budget`` crosses
+                  this axis with a grid).
     """
     alpha: jnp.ndarray
     gamma: jnp.ndarray
@@ -133,6 +141,7 @@ class FlecsHParams(NamedTuple):
     grad_spec: CompressorSpec
     hess_spec: CompressorSpec
     p: Optional[jnp.ndarray] = None
+    bit_budget: Optional[jnp.ndarray] = None
 
     @property
     def grad_s(self):
@@ -209,6 +218,17 @@ def bits_per_round(cfg: FlecsConfig, d: int) -> float:
     """Deterministic per-participating-worker uplink bits of one round."""
     return float(_round_bits(spec_from_name(cfg.grad_compressor),
                              spec_from_name(cfg.hess_compressor), d, cfg.m))
+
+
+def hparams_round_bits(cfg: FlecsConfig, hp: FlecsHParams, d: int):
+    """Per-participating-worker uplink bits of one round at EACH hparams
+    grid point ([G] when the specs carry a grid axis) — the spec-aware
+    price query behind plan-level bit budgets (``compressors.
+    spec_bits_many`` handles family-stacked axes).  ``bits_per_round`` is
+    this at the ``hparams_from_config`` point."""
+    return (spec_bits_many(hp.grad_spec, d)
+            + spec_bits_many(hp.hess_spec, d * cfg.m)
+            + 32.0 * cfg.m * cfg.m)
 
 
 def _worker_messages(local_grad: Callable, local_hvp: Callable,

@@ -70,7 +70,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import (CompressorSpec, as_spec, compress,
-                                    spec_bits)
+                                    spec_bits, spec_bits_many)
 from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
                                applied_staleness, bits_dtype, buffer_busy,
                                buffer_receive, buffer_send,
@@ -109,11 +109,14 @@ class DianaConfig:
 
 class DianaHParams(NamedTuple):
     """Traced per-round DIANA knobs — scalars or [G] sweep-axis arrays.
-    ``p=None`` defers participation to the static config path."""
+    ``p=None`` defers participation to the static config path;
+    ``bit_budget`` (per-node uplink bits, None = unbounded) engages the
+    budget-freeze scan mode (``driver.freeze_on_bit_budget``)."""
     alpha: jnp.ndarray
     gamma: jnp.ndarray
     spec: CompressorSpec
     p: Optional[jnp.ndarray] = None
+    bit_budget: Optional[jnp.ndarray] = None
 
 
 def diana_hparams_from_config(cfg: DianaConfig) -> DianaHParams:
@@ -127,6 +130,13 @@ def diana_hparam_grid(alphas=(1.0,), gammas=(0.5,), levels=(64.0,),
     from repro.core.compressors import dither_spec
     a, g, s, p = _grid_axes(alphas, gammas, levels, ps=ps)
     return DianaHParams(a, g, dither_spec(s), p)
+
+
+def diana_round_bits(cfg: DianaConfig, hp: DianaHParams, d: int):
+    """Per-participating-worker uplink bits/round at each grid point —
+    the spec-aware price behind plan-level bit budgets (one compressed
+    gradient difference per round)."""
+    return spec_bits_many(hp.spec, d)
 
 
 class DianaState(NamedTuple):
@@ -311,10 +321,12 @@ class FedNLConfig:
 
 
 class FedNLHParams(NamedTuple):
-    """Traced per-round FedNL knobs — scalars or [G] sweep-axis arrays."""
+    """Traced per-round FedNL knobs — scalars or [G] sweep-axis arrays
+    (``bit_budget``: per-node budget-freeze axis, None = unbounded)."""
     alpha: jnp.ndarray
     spec: CompressorSpec
     p: Optional[jnp.ndarray] = None
+    bit_budget: Optional[jnp.ndarray] = None
 
 
 def fednl_hparams_from_config(cfg: FedNLConfig) -> FedNLHParams:
@@ -326,6 +338,13 @@ def fednl_hparam_grid(alphas=(1.0,), fracs=(0.25,), ps=None) -> FedNLHParams:
     from repro.core.compressors import topk_spec
     a, f, p = _grid_axes(alphas, fracs, ps=ps)
     return FedNLHParams(a, topk_spec(f), p)
+
+
+def fednl_round_bits(cfg: FedNLConfig, hp: FedNLHParams, d: int):
+    """FedNL's per-round price: an uncompressed gradient (32·d) plus the
+    compressed d×d Hessian difference — the dimension-aware top-k
+    accounting, so budget-fair comparisons charge FedNL what it ships."""
+    return 32.0 * d + spec_bits_many(hp.spec, d * d)
 
 
 class FedNLState(NamedTuple):
@@ -411,9 +430,11 @@ class GDConfig:
 
 
 class GDHParams(NamedTuple):
-    """Traced per-round GD knobs — scalars or [G] sweep-axis arrays."""
+    """Traced per-round GD knobs — scalars or [G] sweep-axis arrays
+    (``bit_budget``: per-node budget-freeze axis, None = unbounded)."""
     alpha: jnp.ndarray
     p: Optional[jnp.ndarray] = None
+    bit_budget: Optional[jnp.ndarray] = None
 
 
 def gd_hparams_from_config(cfg: GDConfig) -> GDHParams:
@@ -424,6 +445,12 @@ def gd_hparam_grid(alphas=(2.0,), ps=None) -> GDHParams:
     """Cartesian (alpha [× p]) grid, [G] leaves."""
     a, p = _grid_axes(alphas, ps=ps)
     return GDHParams(a, p)
+
+
+def gd_round_bits(cfg: GDConfig, hp: GDHParams, d: int):
+    """Uncompressed GD ships one 32-bit float gradient per round —
+    constant over the grid, broadcast to its [G] axis."""
+    return jnp.broadcast_to(jnp.float32(32.0 * d), jnp.shape(hp.alpha))
 
 
 class GDState(NamedTuple):
