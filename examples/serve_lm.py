@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.models import CPU_CTX, decode_step, init_params, prefill
+from repro.models import CPU_CTX, init_params, prefill
 from repro.train.step import make_serve_step
 
 

@@ -12,7 +12,6 @@ Data: synthetic power-law token stream with per-worker distribution shift
 (--flecs [--flecs-m M]), plus checkpoint save/restore.
 """
 import argparse
-import dataclasses
 import time
 
 import jax
@@ -24,8 +23,7 @@ from repro.configs.base import ATTN_GLOBAL, FFN_DENSE, ModelConfig, uniform_plan
 from repro.core.dl_flecs import FlecsDLConfig, make_flecs_train_step
 from repro.launch.sharding import batch_specs, named_shardings
 from repro.models.context import ModelContext
-from repro.models.loss import lm_loss
-from repro.models.model import forward, init_params
+from repro.models.model import init_params
 from repro.optim.optimizers import get_optimizer
 from repro.train.step import make_train_step
 

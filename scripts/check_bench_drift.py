@@ -95,6 +95,7 @@ def main():
         return 0
 
     failed = False
+    compared = []
     for name in args.files:
         gpath, fpath = golden / name, out / name
         if not gpath.exists():
@@ -111,6 +112,7 @@ def main():
             cand = json.load(fh)
         errors = []
         _compare(name, "", gold, cand, args.rtol, args.atol, errors)
+        compared.append(name)
         if errors:
             failed = True
             print(f"FAIL {name}: {len(errors)} drifting value(s)")
@@ -120,6 +122,16 @@ def main():
                 print(f"  ... and {len(errors) - 20} more")
         else:
             print(f"ok   {name}")
+    skipped = len(args.files) - len(compared)
+    print(
+        f"compared {len(compared)}/{len(args.files)} golden(s) against "
+        f"{golden}: {', '.join(compared) if compared else '(none)'}"
+    )
+    if skipped:
+        print(
+            f"FAIL: {skipped} golden(s) missing or unproduced — the gate "
+            "covered less than the configured file list"
+        )
     return 1 if failed else 0
 
 

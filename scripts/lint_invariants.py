@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Thin wrapper so the invariant linter runs without PYTHONPATH setup:
+
+    python scripts/lint_invariants.py [paths] [--strict] [--layer {1,2,all}]
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis ...``; layer 1
+needs no jax (the CI lint job uses exactly this entry point).
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.__main__ import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,5 @@
 """Quick dev sanity: every smoke arch does fwd + prefill + decode, and
 decode logits match full-forward logits."""
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +7,7 @@ import numpy as np
 
 from repro.configs import get_config, list_archs
 from repro.models import (CPU_CTX, decode_step, forward, head_logits,
-                          init_cache, init_params, prefill)
+                          init_params, prefill)
 
 rng = np.random.default_rng(0)
 

@@ -1,0 +1,31 @@
+"""repro.analysis — the repo's trace-safety and invariant linter.
+
+Layer 1 (this package's import surface) is pure ``ast``: importing
+``repro.analysis`` pulls in NO jax/numpy, so the CI lint job can run it in
+a bare Python environment.  Importing the package registers the rules:
+
+    R1  no-python-loops-in-traced-step      (rules_trace)
+    R2  no-host-sync-in-traced-step         (rules_trace)
+    R3  ledger-allocations-use-bits-dtype   (rules_ledger)
+    R4  shard-map-via-compat                (rules_imports)
+    R5  hparam-pytrees-grow-trailing-defaults-only (rules_pytree)
+    R0  (meta) suppressions must carry a justification
+
+Layer 2 (``repro.analysis.semantic``) imports jax but compiles nothing —
+import it explicitly (the CLI's ``--layer 2`` / ``--layer all``).
+
+CLI: ``python -m repro.analysis [paths] [--strict] [--layer {1,2,all}]``
+(or ``scripts/lint_invariants.py``).  See README.md in this directory for
+rule docs and the suppression syntax.
+"""
+from repro.analysis.engine import (Finding, ModuleContext, Rule, RULES,
+                                   get_rules, lint_paths, lint_source)
+from repro.analysis import (rules_imports, rules_ledger, rules_pytree,
+                            rules_trace)
+
+#: Importing a rule module registers its rules (the @rule decorator);
+#: keeping the modules on the public surface documents that side effect.
+RULE_MODULES = (rules_trace, rules_ledger, rules_imports, rules_pytree)
+
+__all__ = ["Finding", "ModuleContext", "Rule", "RULES", "RULE_MODULES",
+           "get_rules", "lint_paths", "lint_source"]

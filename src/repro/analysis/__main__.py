@@ -1,0 +1,101 @@
+"""CLI: ``python -m repro.analysis [paths] [options]``.
+
+Exit status: 0 = clean (suppressed findings and advisory mode don't fail);
+1 = unsuppressed findings under ``--strict`` (or a layer-2 failure);
+2 = bad invocation.
+
+Layer 1 runs without jax installed; ``--layer 2`` / ``--layer all``
+imports jax (still no device compilation — everything is host-side
+tracing / eval_shape).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis import engine
+
+DEFAULT_PATHS = ("src", "scripts", "tests", "examples")
+
+
+def _repo_root() -> Path:
+    """The repo root: the nearest ancestor of this package holding src/
+    (falls back to cwd so the CLI also works from a site-packages
+    install aimed at an explicit path list)."""
+    here = Path(__file__).resolve()
+    for parent in here.parents:
+        if (parent / "src" / "repro").is_dir() and (
+                parent / "ROADMAP.md").is_file():
+            return parent
+    return Path.cwd()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="trace-safety and invariant linter (see "
+                    "src/repro/analysis/README.md)")
+    ap.add_argument("paths", nargs="*",
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS} "
+                         "under the repo root)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any unsuppressed finding")
+    ap.add_argument("--layer", choices=("1", "2", "all"), default="1",
+                    help="1: AST rules (no jax); 2: semantic checks "
+                         "(imports jax); all: both (default: 1)")
+    ap.add_argument("--only", action="append", metavar="RULE",
+                    help="run only these rule ids (repeatable)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule table and exit")
+    ap.add_argument("--update-snapshot", action="store_true",
+                    help="regenerate hparam_fields.json (R5) from the "
+                         "current sources and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in engine.get_rules():
+            print(f"{r.id}  {r.name}\n    {r.doc}")
+        print(f"{engine.META_RULE}  suppression-needs-justification\n"
+              "    every `# repro-lint: disable=...` must say why it is "
+              "safe")
+        return 0
+
+    root = _repo_root()
+
+    if args.update_snapshot:
+        from repro.analysis.rules_pytree import snapshot_path, \
+            update_snapshot
+        snap = update_snapshot(root)
+        print(f"wrote {len(snap)} hparam signatures to {snapshot_path()}")
+        return 0
+
+    rc = 0
+    if args.layer in ("1", "all"):
+        paths = args.paths or [str(root / p) for p in DEFAULT_PATHS
+                               if (root / p).is_dir()]
+        findings = engine.lint_paths(paths, root=root, only=args.only)
+        live = [f for f in findings if not f.suppressed]
+        for f in findings:
+            print(f.format())
+        n_sup = len(findings) - len(live)
+        print(f"layer 1: {len(live)} finding(s), {n_sup} suppressed "
+              f"({len(engine.RULES)} rules + {engine.META_RULE})")
+        if live and args.strict:
+            rc = 1
+
+    if args.layer in ("2", "all"):
+        sys.path.insert(0, str(root / "src"))
+        from repro.analysis.semantic import run_semantic_checks
+        problems = run_semantic_checks()
+        for p in problems:
+            print(f"layer 2: FAIL {p}")
+        print(f"layer 2: {len(problems)} failure(s) "
+              "(switch tables, round_bits, jaxpr walk)")
+        if problems:
+            rc = 1
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

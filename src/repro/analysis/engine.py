@@ -1,0 +1,199 @@
+"""Rule engine for the invariant linter — layer 1 plumbing (pure ``ast``).
+
+This module deliberately imports NOTHING heavy (no jax, no numpy): the CI
+lint job runs layer 1 in a bare Python environment.  It provides:
+
+* :class:`Finding` — one diagnostic: (rule id, path, line, message), plus
+  whether an inline comment suppressed it.
+* :class:`Rule` + :func:`rule` — the registry.  A rule declares which repo
+  paths it applies to (``applies``) and a ``check(ModuleContext)`` that
+  yields findings.  Rule modules register themselves on import
+  (``repro.analysis`` imports them all).
+* :class:`ModuleContext` — a parsed module: source, AST, and the per-line
+  suppression table.
+* :func:`lint_source` / :func:`lint_paths` — entry points.
+
+Suppression syntax (one finding, one justification)::
+
+    for i in range(m):   # repro-lint: disable=R1 -- unrolls static sketch cols
+
+Everything after the rule list (separated by ``--`` or whitespace) is the
+justification.  A disable comment WITHOUT a justification is itself a
+finding (rule ``R0``): the whole point of the gate is that every escape
+hatch says why it is safe.  ``disable=all`` silences every rule on the
+line (justification still required).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Set
+
+SUPPRESS_RE = re.compile(
+    r"#\s*repro-lint:\s*disable=([A-Za-z0-9_,\s]*[A-Za-z0-9_])(.*)$")
+
+#: Rule id reserved for the meta-rule "suppression without justification".
+META_RULE = "R0"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic from one rule at one source line."""
+    rule: str
+    path: str
+    line: int
+    message: str
+    suppressed: bool = False
+
+    def format(self) -> str:
+        tag = " (suppressed)" if self.suppressed else ""
+        return f"{self.path}:{self.line}: {self.rule} {self.message}{tag}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    rules: Set[str]          # rule ids, or {"all"}
+    justification: str       # text after the rule list ("" = unjustified)
+
+    def covers(self, rule_id: str) -> bool:
+        return "all" in self.rules or rule_id in self.rules
+
+
+class ModuleContext:
+    """A parsed module plus the artifacts every rule needs."""
+
+    def __init__(self, source: str, path: str):
+        self.source = source
+        self.path = path
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        self.suppressions: Dict[int, Suppression] = _parse_suppressions(
+            self.lines)
+
+    @property
+    def name(self) -> str:
+        """File basename, the key rule allowlists match on."""
+        return Path(self.path).name
+
+    def finding(self, rule_id: str, node_or_line, message: str) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        sup = self.suppressions.get(line)
+        suppressed = sup is not None and sup.covers(rule_id)
+        return Finding(rule_id, self.path, line, message,
+                       suppressed=suppressed)
+
+
+def _parse_suppressions(lines: Sequence[str]) -> Dict[int, Suppression]:
+    out: Dict[int, Suppression] = {}
+    for i, line in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(line)
+        if m is None:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        justification = m.group(2).strip().lstrip("-— ").strip()
+        out[i] = Suppression(rules, justification)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered invariant check.
+
+    id:       stable short id ("R1", …) used in reports and suppressions.
+    name:     kebab-case slug for humans.
+    doc:      one-line description of the invariant the rule protects.
+    applies:  (repo-relative posix path) -> bool — the rule's file scope.
+    check:    (ModuleContext) -> iterable of findings.
+    """
+    id: str
+    name: str
+    doc: str
+    applies: Callable[[str], bool]
+    check: Callable[[ModuleContext], Iterable[Finding]]
+
+
+RULES: List[Rule] = []
+
+
+def rule(rule_id: str, name: str, doc: str,
+         applies: Callable[[str], bool]):
+    """Decorator registering ``fn(ctx) -> Iterable[Finding]`` as a rule."""
+    def register(fn: Callable[[ModuleContext], Iterable[Finding]]) -> Rule:
+        if any(r.id == rule_id for r in RULES):
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        r = Rule(rule_id, name, doc, applies, fn)
+        RULES.append(r)
+        return r
+    return register
+
+
+def get_rules(only: Optional[Sequence[str]] = None) -> List[Rule]:
+    if only is None:
+        return list(RULES)
+    known = {r.id for r in RULES}
+    missing = [rid for rid in only if rid not in known]
+    if missing:
+        raise ValueError(f"unknown rule id(s) {missing}; known: "
+                         f"{sorted(known)}")
+    return [r for r in RULES if r.id in only]
+
+
+def _meta_findings(ctx: ModuleContext) -> List[Finding]:
+    """R0: every suppression comment must carry a justification."""
+    out = []
+    for line, sup in sorted(ctx.suppressions.items()):
+        if not sup.justification:
+            out.append(Finding(
+                META_RULE, ctx.path, line,
+                "suppression without a justification — append why it is "
+                "safe: `# repro-lint: disable=<rule> -- <reason>`"))
+    return out
+
+
+def lint_source(source: str, path: str,
+                only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one module given as text.  ``path`` decides rule applicability
+    (it is matched as a repo-relative posix path), so tests can aim fixture
+    snippets at any scope (e.g. ``src/repro/core/_fixture.py``)."""
+    rel = Path(path).as_posix()
+    try:
+        ctx = ModuleContext(source, rel)
+    except SyntaxError as e:
+        return [Finding("E9", rel, e.lineno or 0, f"syntax error: {e.msg}")]
+    findings: List[Finding] = []
+    for r in get_rules(only):
+        if r.applies(rel):
+            findings.extend(r.check(ctx))
+    if only is None or META_RULE in only:
+        findings.extend(_meta_findings(ctx))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))
+
+
+def iter_python_files(paths: Sequence[str],
+                      root: Optional[Path] = None) -> Iterable[Path]:
+    root = root or Path.cwd()
+    for p in paths:
+        path = Path(p)
+        if not path.is_absolute():
+            path = root / path
+        if path.is_file() and path.suffix == ".py":
+            yield path
+        elif path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+
+
+def lint_paths(paths: Sequence[str], root: Optional[Path] = None,
+               only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint every ``.py`` file under ``paths`` (files or directories),
+    reporting repo-relative paths (relative to ``root``, default cwd)."""
+    root = root or Path.cwd()
+    findings: List[Finding] = []
+    for f in iter_python_files(paths, root):
+        try:
+            rel = f.resolve().relative_to(root.resolve()).as_posix()
+        except ValueError:
+            rel = f.as_posix()
+        findings.extend(lint_source(f.read_text(), rel, only=only))
+    return findings

@@ -1,0 +1,190 @@
+"""R3 — ledger-dtype discipline for cumulative bit counters.
+
+The repo's wire accounting (``bits_per_node`` ledgers, ``bit_budget``
+axes) must accumulate in ``driver.bits_dtype()``: float32 loses integer
+bit counts past 2^24, which is reachable on the d=20958 problems — the
+exact bug class PR 5 fixed by hand.  This rule makes the convention
+static: any array *allocation* bound to a ledger-named slot must pass its
+dtype as ``bits_dtype()`` (or inherit it from an existing ledger via
+``<ledger>.dtype``), never a raw ``jnp.float32`` / default dtype.
+
+What counts as a ledger binding:
+
+* an assignment / augmented assignment whose target name matches
+  :data:`LEDGER_NAME_RE` (``bits_per_node``, ``bit_budget``, ``budgets``,
+  ``payload_bits``, ``bits_new``, …);
+* a keyword argument with such a name (``FlecsState(...,
+  bits_per_node=...)``);
+* a positional argument landing on such a field of a NamedTuple defined
+  in the same module (field order resolved from the class body — this is
+  how ``init_diana``-style positional constructors are covered).
+
+What counts as an allocation: ``jnp.zeros/ones/full/empty/array/asarray``
+anywhere inside the bound expression (so ``jnp.atleast_1d(jnp.asarray(b,
+bits_dtype()))`` resolves to the inner call), plus raw dtype-constructor
+scalars (``jnp.float32(0.0)``), plus ``.astype(...)`` re-casts of a
+ledger-named value.  Pass-throughs and arithmetic on existing ledgers are
+fine — dtype inference keeps those in the accumulator dtype.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+from repro.analysis.engine import Finding, ModuleContext, rule
+
+LEDGER_NAME_RE = re.compile(r"(^|_)(bit|bits|budget|budgets)(_|$)")
+
+_ALLOC_FNS = {"zeros", "ones", "full", "empty", "array", "asarray"}
+_DTYPE_CTORS = {"float32", "float64", "float16", "bfloat16", "int32",
+                "int64"}
+# (function, positional index of its dtype argument)
+_DTYPE_POS = {"zeros": 1, "ones": 1, "empty": 1, "array": 1, "asarray": 1,
+              "full": 2}
+
+
+def _in_scope(rel_path: str) -> bool:
+    return rel_path.startswith("src/repro/")
+
+
+def is_ledger_name(name: str) -> bool:
+    return bool(LEDGER_NAME_RE.search(name))
+
+
+def _namedtuple_fields(tree: ast.Module) -> Dict[str, List[str]]:
+    """Field order of every NamedTuple class defined in the module."""
+    out: Dict[str, List[str]] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        bases = {b.attr if isinstance(b, ast.Attribute) else getattr(
+            b, "id", None) for b in node.bases}
+        if "NamedTuple" not in bases:
+            continue
+        out[node.name] = [s.target.id for s in node.body
+                          if isinstance(s, ast.AnnAssign)
+                          and isinstance(s.target, ast.Name)]
+    return out
+
+
+def _is_bits_dtype_expr(node: ast.AST) -> bool:
+    """True for ``bits_dtype()`` / ``driver.bits_dtype()`` / an existing
+    ledger's ``.dtype`` (e.g. ``state.bits_per_node.dtype``)."""
+    if isinstance(node, ast.Call):
+        f = node.func
+        name = f.attr if isinstance(f, ast.Attribute) else getattr(
+            f, "id", None)
+        return name == "bits_dtype"
+    if isinstance(node, ast.Attribute) and node.attr == "dtype":
+        base = node.value
+        base_name = base.attr if isinstance(base, ast.Attribute) else getattr(
+            base, "id", None)
+        return base_name is not None and is_ledger_name(base_name)
+    return False
+
+
+def _alloc_dtype_arg(call: ast.Call) -> Tuple[Optional[str],
+                                              Optional[ast.AST]]:
+    """(alloc fn name, dtype expression or None) if ``call`` is a jnp
+    allocation; (None, None) otherwise."""
+    f = call.func
+    if not (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+            and f.value.id in ("jnp", "jax")):
+        return None, None
+    if f.attr not in _ALLOC_FNS:
+        return None, None
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            return f.attr, kw.value
+    pos = _DTYPE_POS[f.attr]
+    if len(call.args) > pos:
+        return f.attr, call.args[pos]
+    return f.attr, None
+
+
+def _check_value(ctx: ModuleContext, slot: str, value: ast.AST,
+                 findings: List[Finding]) -> None:
+    """Flag raw-dtype / default-dtype allocations inside ``value`` bound
+    to the ledger slot ``slot``."""
+    for node in ast.walk(value):
+        if not isinstance(node, ast.Call):
+            continue
+        fn, dtype = _alloc_dtype_arg(node)
+        if fn is not None:
+            if dtype is None:
+                findings.append(ctx.finding(
+                    "R3", node,
+                    f"ledger {slot!r} allocated via jnp.{fn} with the "
+                    "DEFAULT dtype — pass bits_dtype() so bit counts "
+                    "survive past 2^24 under x64"))
+            elif not _is_bits_dtype_expr(dtype):
+                findings.append(ctx.finding(
+                    "R3", node,
+                    f"ledger {slot!r} allocated via jnp.{fn} with a raw "
+                    "dtype — use bits_dtype() (or an existing ledger's "
+                    ".dtype), not a hardcoded float type"))
+            continue
+        # raw dtype-constructor scalar: jnp.float32(0.0)
+        f = node.func
+        if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+                and f.value.id == "jnp" and f.attr in _DTYPE_CTORS):
+            findings.append(ctx.finding(
+                "R3", node,
+                f"ledger {slot!r} seeded from jnp.{f.attr}(...) — "
+                "allocate with jnp.zeros((), bits_dtype()) so the "
+                "accumulator dtype follows the x64 flag"))
+
+
+@rule("R3", "ledger-allocations-use-bits-dtype",
+      "bit ledgers / budgets must be allocated in bits_dtype(), never a "
+      "raw or default float dtype", _in_scope)
+def check_ledger_dtypes(ctx: ModuleContext) -> Iterable[Finding]:
+    findings: List[Finding] = []
+    nt_fields = _namedtuple_fields(ctx.tree)
+
+    def targets_of(node) -> Sequence[str]:
+        if isinstance(node, ast.Assign):
+            return [t.id for t in node.targets if isinstance(t, ast.Name)]
+        if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            t = node.target
+            return [t.id] if isinstance(t, ast.Name) else []
+        return []
+
+    for node in ast.walk(ctx.tree):
+        # 1) assignments to ledger-named variables
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            value = node.value
+            if value is None:
+                continue
+            for name in targets_of(node):
+                if is_ledger_name(name):
+                    _check_value(ctx, name, value, findings)
+        if not isinstance(node, ast.Call):
+            continue
+        # 2) keyword arguments with ledger names
+        for kw in node.keywords:
+            if kw.arg is not None and is_ledger_name(kw.arg):
+                _check_value(ctx, kw.arg, kw.value, findings)
+        # 3) positional args onto ledger fields of local NamedTuples
+        callee = getattr(node.func, "id", None)
+        fields = nt_fields.get(callee)
+        if fields:
+            for i, arg in enumerate(node.args[:len(fields)]):
+                if is_ledger_name(fields[i]):
+                    _check_value(ctx, fields[i], arg, findings)
+        # 4) .astype(...) re-casts of a ledger-named value
+        f = node.func
+        if (isinstance(f, ast.Attribute) and f.attr == "astype"
+                and node.args):
+            base = f.value
+            base_name = base.attr if isinstance(
+                base, ast.Attribute) else getattr(base, "id", None)
+            if (base_name is not None and is_ledger_name(base_name)
+                    and not _is_bits_dtype_expr(node.args[0])):
+                findings.append(ctx.finding(
+                    "R3", node,
+                    f"ledger {base_name!r} re-cast via .astype with a "
+                    "non-ledger dtype — bit counters must stay in "
+                    "bits_dtype()"))
+    return findings

@@ -1,0 +1,149 @@
+"""R5 — hparam NamedTuples may only grow trailing defaulted slots.
+
+Every ``*HParams`` NamedTuple is a pytree whose leaf ORDER is the public
+contract: sweep grids are stacked positionally (``init_diana(...)`` style
+constructors pass fields by position), checkpoints/goldens store leaves in
+field order, and ``sweep_program`` vmaps over the stacked axes by
+position.  Reordering, renaming, or inserting a field in the middle
+silently re-labels every axis; removing a default breaks every existing
+call site.  The only safe evolution is appending new fields WITH defaults.
+
+This rule compares each ``*HParams`` class against the committed
+signature snapshot ``hparam_fields.json`` (next to this module).  The
+snapshot must be a *prefix* of the current field list; any field past the
+snapshot must carry a default, and a field that was defaulted in the
+snapshot may not become required.  Intentional breaking changes are made
+by regenerating the snapshot (``python -m repro.analysis
+--update-snapshot``) — which puts the diff in review, exactly where a
+pytree-contract change belongs.
+"""
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Tuple
+
+from repro.analysis.engine import Finding, ModuleContext, rule
+
+SNAPSHOT_FILE = "hparam_fields.json"
+
+#: Class-name suffix that marks a NamedTuple as a tracked hparam pytree.
+HPARAM_SUFFIX = "HParams"
+
+
+def snapshot_path() -> Path:
+    return Path(__file__).resolve().parent / SNAPSHOT_FILE
+
+
+def load_snapshot() -> Dict[str, List[List[object]]]:
+    path = snapshot_path()
+    if not path.is_file():
+        return {}
+    return json.loads(path.read_text())
+
+
+def _in_scope(rel_path: str) -> bool:
+    return (rel_path.startswith("src/repro/")
+            and not rel_path.startswith("src/repro/analysis/"))
+
+
+def hparam_classes(tree: ast.Module) -> Dict[str, List[Tuple[str, bool]]]:
+    """``{class name: [(field, has_default), ...]}`` for every ``*HParams``
+    NamedTuple defined at module top level."""
+    out: Dict[str, List[Tuple[str, bool]]] = {}
+    for node in tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        if not node.name.endswith(HPARAM_SUFFIX):
+            continue
+        bases = {b.attr if isinstance(b, ast.Attribute) else getattr(
+            b, "id", None) for b in node.bases}
+        if "NamedTuple" not in bases:
+            continue
+        fields = [(s.target.id, s.value is not None) for s in node.body
+                  if isinstance(s, ast.AnnAssign)
+                  and isinstance(s.target, ast.Name)]
+        out[node.name] = fields
+    return out
+
+
+@rule("R5", "hparam-pytrees-grow-trailing-defaults-only",
+      "hparam NamedTuples may only append trailing defaulted fields "
+      "(positional/pytree contract, checked against hparam_fields.json)",
+      _in_scope)
+def check_hparam_signatures(ctx: ModuleContext) -> Iterable[Finding]:
+    classes = hparam_classes(ctx.tree)
+    snapshot = load_snapshot()
+    findings = []
+    class_lines = {n.name: n.lineno for n in ctx.tree.body
+                   if isinstance(n, ast.ClassDef)}
+
+    for name, fields in classes.items():
+        key = f"{ctx.path}::{name}"
+        snap = snapshot.get(key)
+        line = class_lines.get(name, 1)
+        if snap is None:
+            findings.append(ctx.finding(
+                "R5", line,
+                f"hparam class {name!r} has no entry in "
+                f"{SNAPSHOT_FILE} — run `python -m repro.analysis "
+                "--update-snapshot` to commit its signature"))
+            continue
+        snap_fields = [(str(f), bool(d)) for f, d in snap]
+        cur_names = [f for f, _ in fields]
+        snap_names = [f for f, _ in snap_fields]
+        if cur_names[:len(snap_names)] != snap_names:
+            findings.append(ctx.finding(
+                "R5", line,
+                f"hparam class {name!r} reorders/renames/removes snapshot "
+                f"fields (snapshot {snap_names}, current {cur_names}) — "
+                "existing positional call sites and stacked sweep axes "
+                "would silently re-label; only trailing defaulted "
+                "additions are allowed"))
+            continue
+        for (fname, had_default), (_, has_default) in zip(
+                snap_fields, fields):
+            if had_default and not has_default:
+                findings.append(ctx.finding(
+                    "R5", line,
+                    f"hparam field {name}.{fname} lost its default — "
+                    "existing call sites that omit it would break"))
+        for fname, has_default in fields[len(snap_fields):]:
+            if not has_default:
+                findings.append(ctx.finding(
+                    "R5", line,
+                    f"new hparam field {name}.{fname} has no default — "
+                    "new fields must be trailing AND defaulted so old "
+                    "positional call sites keep working"))
+
+    # stale snapshot entries for this module (class renamed/removed)
+    prefix = f"{ctx.path}::"
+    for key in snapshot:
+        if key.startswith(prefix) and key[len(prefix):] not in classes:
+            findings.append(ctx.finding(
+                "R5", 1,
+                f"snapshot entry {key!r} matches no class in this module "
+                "— hparam classes may not be removed/renamed without "
+                "regenerating the snapshot (--update-snapshot)"))
+    return findings
+
+
+def update_snapshot(root: Path) -> Dict[str, List[List[object]]]:
+    """Regenerate ``hparam_fields.json`` from the repo under ``root`` and
+    return the new snapshot."""
+    snapshot: Dict[str, List[List[object]]] = {}
+    src = root / "src" / "repro"
+    for f in sorted(src.rglob("*.py")):
+        rel = f.resolve().relative_to(root.resolve()).as_posix()
+        if not _in_scope(rel):
+            continue
+        try:
+            tree = ast.parse(f.read_text(), filename=rel)
+        except SyntaxError:
+            continue
+        for name, fields in hparam_classes(tree).items():
+            snapshot[f"{rel}::{name}"] = [[f_, d] for f_, d in fields]
+    snapshot_path().write_text(json.dumps(snapshot, indent=2,
+                                          sort_keys=True) + "\n")
+    return snapshot

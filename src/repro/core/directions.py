@@ -11,7 +11,6 @@ by tests/test_directions.py.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -27,7 +27,6 @@ Mapping (DESIGN.md §3):
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -36,6 +35,7 @@ import numpy as np
 
 from repro.compat import axis_size, shard_map
 from repro.configs.base import ModelConfig
+from repro.core.driver import bits_dtype
 from repro.core.compressors import (dither_spec, identity_spec,
                                     psum_level_cap, shared_scale_levels,
                                     spec_bits)
@@ -67,7 +67,8 @@ def _tensor_sketch(step, idx, shape, m):
     """Seeded per-tensor sketch column block [numel, m] — regenerated, never
     stored or communicated (Algorithm 1's shared-seed trick)."""
     key = jax.random.fold_in(jax.random.fold_in(jax.random.key(23), step), idx)
-    v = jax.random.rademacher(key, (int(np.prod(shape)), m), jnp.float32)
+    numel = int(np.prod(shape))  # repro-lint: disable=R2 -- folds a STATIC Python shape tuple at trace time; no traced value crosses to host
+    v = jax.random.rademacher(key, (numel, m), jnp.float32)
     return v / np.sqrt(m)
 
 
@@ -136,7 +137,7 @@ def make_flecs_train_step(cfg: ModelConfig, ctx: ModelContext,
         # (compressors.psum_level_cap), so fcfg.s_levels may be a traced
         # sweep axis — DL-scale level grids vmapped in one program.
         gspec = dither_spec(psum_level_cap(fcfg.s_levels, n))
-        payload_bits = jnp.float32(0.0)   # idealized uplink (spec_bits)
+        payload_bits = jnp.zeros((), bits_dtype())  # idealized uplink
 
         # --- compressed gradient differences (the CGD contribution) -------
         g_tilde, new_own, new_mean = [], [], []

@@ -14,7 +14,6 @@ Direct update (Alg 3):
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 

@@ -2,11 +2,9 @@
 are flattened/padded into the kernel's [rows, 128k-cols] layout."""
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.dither.dither import dither_decode, dither_encode
 

@@ -7,7 +7,6 @@ basis) used for dry-run lowering.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention

@@ -26,8 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, INPUT_SHAPES, get_config
-from repro.launch.hlo_analysis import (collective_wire_bytes, model_flops,
-                                       roofline_terms)
+from repro.launch.hlo_analysis import model_flops, roofline_terms
 from repro.launch.inputs import abstract_cache, input_specs
 from repro.launch.mesh import make_production_mesh
 from repro.launch.sharding import (batch_specs, cache_specs, named_shardings,

@@ -14,7 +14,6 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.launch.sharding import batch_specs, named_shardings
 from repro.models.context import ModelContext
 from repro.models.model import init_params, prefill
 from repro.train.step import make_serve_step

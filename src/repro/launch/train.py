@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
-from repro.launch.sharding import batch_specs, named_shardings, param_specs
+from repro.launch.sharding import batch_specs, named_shardings
 from repro.models.context import ModelContext
 from repro.models.model import init_params
 from repro.optim.optimizers import get_optimizer

@@ -6,7 +6,6 @@ the Pallas flash-attention kernel in ``repro.kernels.flash_attention``.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

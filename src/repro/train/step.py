@@ -1,12 +1,9 @@
 """Train / serve step factories (the jit roots for runs and dry-runs)."""
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.context import ModelContext

@@ -1,5 +1,4 @@
 """Checkpoint round-trips + config-system invariants."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp

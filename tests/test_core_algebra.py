@@ -1,6 +1,5 @@
 """Unit tests for sketches, HVPs, Hessian-approximation updates and search
 directions (Algorithms 2-5, Definition 7, Lemma 9)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

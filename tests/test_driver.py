@@ -11,9 +11,8 @@ import pytest
 
 from repro.core.driver import (iters_for_bit_budget, masked_mean,
                                run_experiment, run_sweep)
-from repro.core.flecs import (FlecsConfig, FlecsHParams, hparam_grid,
-                              init_state, make_flecs_step,
-                              make_flecs_sweep_step)
+from repro.core.flecs import (FlecsConfig, hparam_grid, init_state,
+                              make_flecs_step, make_flecs_sweep_step)
 from repro.data.logreg import make_problem
 
 PROB = make_problem(d=24, n_workers=4, r=24, mu=1e-3, seed=5)

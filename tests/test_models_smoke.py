@@ -10,7 +10,7 @@ pytestmark = pytest.mark.slow  # full-model smoke: minutes, see quick_check.sh
 
 from repro.configs import get_config, list_archs
 from repro.models import (CPU_CTX, decode_step, forward, head_logits,
-                          init_cache, init_params, prefill)
+                          init_params, prefill)
 from repro.models.loss import lm_loss
 from repro.optim.optimizers import get_optimizer
 
