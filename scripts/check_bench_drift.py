@@ -23,6 +23,16 @@ Refresh the goldens after an INTENTIONAL numeric change (rerun the smoke
 commands from .github/workflows/ci.yml first, then commit the result)::
 
     python scripts/check_bench_drift.py --update ...same files...
+
+Timing goldens (``--timing``) gate ``benchmarks/out/kernel_bench.json``
+differently: the ``meta`` subtree (benchmark coverage: sizes, iteration
+counts, key list) must match EXACTLY, while every ``timings_us`` median
+compares under ``--timing-rtol`` — deliberately generous (default 8x),
+because CI hardware varies run to run; the gate exists to catch
+order-of-magnitude regressions (an eager fallback, a recompile per call),
+not scheduler noise::
+
+    python scripts/check_bench_drift.py --timing kernel_bench.json
 """
 
 import argparse
@@ -34,8 +44,13 @@ from pathlib import Path
 TOLERANT_KEYS = {"F", "grad_sq", "active_mean", "Mbits_mean", "flushes"}
 
 
-def _compare(path, key, golden, fresh, rtol, atol, errors):
-    """Recursively diff ``fresh`` against ``golden``, appending messages."""
+def _compare(path, key, golden, fresh, rtol, atol, errors, tolerant_all=False):
+    """Recursively diff ``fresh`` against ``golden``, appending messages.
+
+    ``tolerant_all`` puts EVERY numeric leaf under the relative tolerance
+    (the ``timings_us`` subtree of a timing golden); otherwise only the
+    ``TOLERANT_KEYS`` are tolerant and everything else is exact.
+    """
     if isinstance(golden, dict):
         if not isinstance(fresh, dict):
             errors.append(f"{path}: expected an object")
@@ -46,7 +61,16 @@ def _compare(path, key, golden, fresh, rtol, atol, errors):
             elif k not in fresh:
                 errors.append(f"{path}.{k}: missing from output")
             else:
-                _compare(f"{path}.{k}", k, golden[k], fresh[k], rtol, atol, errors)
+                _compare(
+                    f"{path}.{k}",
+                    k,
+                    golden[k],
+                    fresh[k],
+                    rtol,
+                    atol,
+                    errors,
+                    tolerant_all,
+                )
         return
     if isinstance(golden, list):
         if not isinstance(fresh, list):
@@ -56,7 +80,7 @@ def _compare(path, key, golden, fresh, rtol, atol, errors):
             errors.append(f"{path}: length {len(fresh)} != golden {len(golden)}")
             return
         for i, (g, f) in enumerate(zip(golden, fresh)):
-            _compare(f"{path}[{i}]", key, g, f, rtol, atol, errors)
+            _compare(f"{path}[{i}]", key, g, f, rtol, atol, errors, tolerant_all)
         return
     numeric = isinstance(golden, (int, float)) and not isinstance(golden, bool)
     fresh_numeric = isinstance(fresh, (int, float)) and not isinstance(fresh, bool)
@@ -64,12 +88,32 @@ def _compare(path, key, golden, fresh, rtol, atol, errors):
         if golden != fresh:
             errors.append(f"{path}: {fresh!r} != golden {golden!r}")
         return
-    if key in TOLERANT_KEYS:
+    if tolerant_all or key in TOLERANT_KEYS:
         if abs(fresh - golden) > atol + rtol * abs(golden):
             errors.append(f"{path}: {fresh!r} drifted from {golden!r} (rtol={rtol})")
         return
     if fresh != golden:
         errors.append(f"{path}: {fresh!r} != golden {golden!r} (exact-match key)")
+
+
+def _compare_timing(name, golden, fresh, timing_rtol, atol, errors):
+    """Timing-golden split: exact ``meta`` (coverage), tolerant medians."""
+    for part in ("meta", "timings_us"):
+        if part not in golden or part not in fresh:
+            missing = "golden" if part not in golden else "output"
+            errors.append(f"{name}.{part}: missing from {missing}")
+            return
+    _compare(f"{name}.meta", "", golden["meta"], fresh["meta"], 0.0, 0.0, errors)
+    _compare(
+        f"{name}.timings_us",
+        "",
+        golden["timings_us"],
+        fresh["timings_us"],
+        timing_rtol,
+        atol,
+        errors,
+        tolerant_all=True,
+    )
 
 
 def main():
@@ -83,6 +127,17 @@ def main():
     ap.add_argument("--atol", type=float, default=1e-8)
     ap.add_argument(
         "--update", action="store_true", help="refresh goldens instead of comparing"
+    )
+    ap.add_argument(
+        "--timing",
+        action="store_true",
+        help="files are timing goldens: exact meta, timings_us under --timing-rtol",
+    )
+    ap.add_argument(
+        "--timing-rtol",
+        type=float,
+        default=8.0,
+        help="relative tolerance for timings_us medians (generous: CI hw varies)",
     )
     args = ap.parse_args()
     out, golden = Path(args.out), Path(args.golden)
@@ -111,7 +166,10 @@ def main():
         with open(fpath) as fh:
             cand = json.load(fh)
         errors = []
-        _compare(name, "", gold, cand, args.rtol, args.atol, errors)
+        if args.timing:
+            _compare_timing(name, gold, cand, args.timing_rtol, args.atol, errors)
+        else:
+            _compare(name, "", gold, cand, args.rtol, args.atol, errors)
         compared.append(name)
         if errors:
             failed = True

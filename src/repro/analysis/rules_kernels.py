@@ -1,0 +1,96 @@
+"""R6 — kernel/ref pairing: every Pallas kernel ships a differential
+oracle and a registered differential test.
+
+The kernel layer's whole safety story is differential testing: a Pallas
+kernel is trusted only because tier-1 proves it bit-compatible with a
+pure-jnp oracle in interpret mode on CPU.  That story breaks silently if
+a new kernel package lands without its oracle, or with an oracle nobody
+wired into the test suite.  This rule makes the pairing structural:
+
+* every module under ``src/repro/kernels/<pkg>/`` that LAUNCHES a kernel
+  (calls ``pallas_call``) must sit next to a ``ref.py`` oracle in the
+  same package, and
+* the differential registry (``tests/test_kernels.py``) must mention
+  ``repro.kernels.<pkg>`` — i.e. the package's differential test exists
+  and is collected by tier-1.
+
+Both file probes resolve relative to the current working directory — the
+repo root, which is the execution contract of ``lint_paths``' default
+root and of every CI invocation.  Linting a detached fixture path whose
+package directory does not exist reports a missing oracle (the fixture
+behavior tests rely on).  When the test registry file itself is absent
+(e.g. linting a vendored subtree), the registration check is skipped
+rather than firing on every kernel.
+
+At most ONE finding per module: a missing ref.py short-circuits the
+registration check, because an unpaired kernel is the actionable problem
+and the missing test follows from it.
+
+R4 note: pallas imports themselves are sanctioned (``jax.experimental.
+pallas`` is stable across the supported jax range and is NOT a shimmed
+name) — R6 governs the *pairing*, not the import.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+from typing import Iterable, List
+
+from repro.analysis.engine import Finding, ModuleContext, rule
+
+#: The differential registry a kernel package must be mentioned in.
+#: Module-level so tests can monkeypatch the probe target.
+TEST_FILE = Path("tests") / "test_kernels.py"
+
+#: Scope: modules INSIDE a kernel package (src/repro/kernels/<pkg>/*.py).
+#: A ref.py is itself the oracle, never a kernel launcher — excluded so
+#: an oracle that (legitimately) delegates to kernel helpers can't be
+#: asked to pair with itself.
+_SCOPE_RE = re.compile(r"^src/repro/kernels/[^/]+/(?!ref\.py$)[^/]+\.py$")
+
+
+def _in_scope(rel_path: str) -> bool:
+    return _SCOPE_RE.match(rel_path) is not None
+
+
+def _pallas_launches(tree: ast.AST) -> List[ast.Call]:
+    """Every ``pallas_call`` call site (``pl.pallas_call(...)`` or a bare
+    ``pallas_call(...)`` import alias)."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        if name == "pallas_call":
+            out.append(node)
+    return out
+
+
+@rule("R6", "kernel-ref-pairing",
+      "every Pallas kernel module pairs with a ref.py oracle and a "
+      "registered differential test (tests/test_kernels.py)", _in_scope)
+def check_kernel_ref_pairing(ctx: ModuleContext) -> Iterable[Finding]:
+    launches = _pallas_launches(ctx.tree)
+    if not launches:
+        return []
+    pkg_dir = Path(ctx.path).parent
+    pkg = pkg_dir.name
+    if not (pkg_dir / "ref.py").exists():
+        return [ctx.finding(
+            "R6", launches[0],
+            f"module launches pallas_call but {pkg_dir.as_posix()}/ref.py "
+            "is missing — every kernel package ships a pure-jnp oracle "
+            "(kernel/ops/ref triple) so the kernel is differentially "
+            "testable in interpret mode")]
+    if TEST_FILE.exists() and (
+            f"repro.kernels.{pkg}" not in TEST_FILE.read_text()):
+        return [ctx.finding(
+            "R6", launches[0],
+            f"kernel package `repro.kernels.{pkg}` has a ref.py but no "
+            f"differential test registered in {TEST_FILE.as_posix()} — "
+            "add an interpret-mode kernel-vs-ref test so tier-1 pins the "
+            "bit-compatibility contract")]
+    return []

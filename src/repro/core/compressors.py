@@ -12,7 +12,11 @@ values.  The three unified entry points
 dispatch on the family id via ``lax.switch``, so a whole grid of compressor
 choices (levels, fractions, even families) becomes a vmappable axis: one
 compiled program sweeps every point (see ``repro.core.flecs``'s
-``make_flecs_sweep_step`` / ``driver.run_sweep``).  The static
+``make_flecs_sweep_step`` / ``driver.run_sweep``).  ``compress`` and
+``spec_bits`` take a static ``use_kernel`` flag that swaps the dither and
+top-k branch bodies for the fused Pallas kernels
+(``repro.kernels.compressor`` — bit-identical, interpret mode off-TPU);
+the jnp expressions below stay the differential reference.  The static
 :class:`Compressor` wrapper (and ``get_compressor(name)``) is a thin veneer
 over the same spec machinery, so the static and sweep paths are
 trace-identical by construction — same ops, same key consumption.
@@ -162,21 +166,90 @@ def _topk(key, x, frac):
 
 
 # ---------------------------------------------------------------------------
+# Fused-kernel dispatch (the optional repro.kernels.compressor layer)
+# ---------------------------------------------------------------------------
+
+_KERNEL_OPS = None      # unresolved; False once probed and unavailable
+
+
+def _kernel_ops():
+    """Resolve the optional fused-kernel layer once.  Returns the
+    ``repro.kernels.compressor.ops`` module, or None when pallas (or the
+    kernel package) is unavailable — callers then fall back to the jnp
+    path, which the kernels are bit-identical to, so the fallback is
+    numerics-free by construction."""
+    global _KERNEL_OPS
+    if _KERNEL_OPS is None:
+        try:
+            from repro.kernels.compressor import ops as kernel_ops
+            _KERNEL_OPS = kernel_ops
+        except ImportError:             # pallas absent: jnp path only
+            _KERNEL_OPS = False
+    return _KERNEL_OPS or None
+
+
+def _dither_impl(key, x, s, use_kernel):
+    """Dither branch body: the fused Pallas kernel when requested and
+    statically eligible (``ops.supports``), else the jnp reference."""
+    ops = _kernel_ops() if use_kernel else None
+    if ops is not None and ops.supports(x):
+        return ops.fused_dither(key, x, s)[0]
+    return _dither(key, x, s)
+
+
+def _topk_impl(key, x, frac, use_kernel):
+    """Top-k branch body: fused kernel when eligible, else jnp."""
+    ops = _kernel_ops() if use_kernel else None
+    if ops is not None and ops.supports(x):
+        return ops.fused_topk(key, x, frac)[0]
+    return _topk(key, x, frac)
+
+
+def _dither_bits_impl(s, d, use_kernel):
+    """Dither ledger branch: the bits-only kernel shares its formula
+    with the fused kernel's in-pass count, so both prices agree."""
+    ops = _kernel_ops() if use_kernel else None
+    if ops is not None:
+        return ops.dither_bits_fused(s, d)
+    return dither_bits(s) * d
+
+
+def _topk_bits_impl(frac, d, kept, use_kernel):
+    """Top-k ledger branch (``kept`` precomputed by the caller so the
+    jnp expression stays identical to the pre-kernel code)."""
+    ops = _kernel_ops() if use_kernel else None
+    if ops is not None:
+        return ops.topk_bits_fused(frac, d)
+    return kept * (32.0 + jnp.ceil(jnp.log2(jnp.maximum(d, 1.0))))
+
+
+# ---------------------------------------------------------------------------
 # Unified spec-dispatched ops (lax.switch over the family id)
 # ---------------------------------------------------------------------------
 
-def compress(spec: CompressorSpec, key, x) -> jnp.ndarray:
+def compress(spec: CompressorSpec, key, x, use_kernel: bool = False
+             ) -> jnp.ndarray:
     """Q(x) under ``spec`` — every field may be traced, so the compressor
-    choice itself is a vmappable sweep axis."""
+    choice itself is a vmappable sweep axis.
+
+    ``use_kernel=True`` (a STATIC flag) routes the dither and top-k
+    families through the fused Pallas kernels
+    (``repro.kernels.compressor``, interpret mode off-TPU) when the
+    tensor is eligible; identity/natural — and ineligible tensors, and
+    environments without pallas — keep the jnp path.  The kernels are
+    bit-identical to the jnp reference under a consistent evaluation
+    context (the differential suite in tests/test_kernels.py pins it),
+    so the two paths are interchangeable mid-run."""
     return jax.lax.switch(
         spec.family,
         (lambda: x,
-         lambda: _dither(key, x, spec.s),
+         lambda: _dither_impl(key, x, spec.s, use_kernel),
          lambda: _natural(key, x),
-         lambda: _topk(key, x, spec.frac)))
+         lambda: _topk_impl(key, x, spec.frac, use_kernel)))
 
 
-def spec_bits(spec: CompressorSpec, d) -> jnp.ndarray:
+def spec_bits(spec: CompressorSpec, d, use_kernel: bool = False
+              ) -> jnp.ndarray:
     """Exact uplink payload bits of compressing a d-element tensor.
 
     identity: 32·d.
@@ -186,15 +259,19 @@ def spec_bits(spec: CompressorSpec, d) -> jnp.ndarray:
     top-k:    ⌈frac·d⌉ kept values, each shipping a 32-bit payload plus a
               ⌈log2 d⌉-bit index — dimension-aware, unlike the old flat
               64·frac per element which hardcoded a 32-bit index.
+
+    ``use_kernel=True`` prices the dither/top-k branches through the
+    bits-only ledger kernels, which share their formulas with the fused
+    value kernels' in-pass counts — EXACTLY the numbers above.
     """
     d = jnp.asarray(d, jnp.float32)
     kept = jnp.clip(jnp.ceil(spec.frac * d), 1.0, d)
     return jax.lax.switch(
         spec.family,
         (lambda: 32.0 * d,
-         lambda: dither_bits(spec.s) * d,
+         lambda: _dither_bits_impl(spec.s, d, use_kernel),
          lambda: 9.0 * d,
-         lambda: kept * (32.0 + jnp.ceil(jnp.log2(jnp.maximum(d, 1.0))))))
+         lambda: _topk_bits_impl(spec.frac, d, kept, use_kernel)))
 
 
 def spec_bits_many(spec: CompressorSpec, d) -> jnp.ndarray:

@@ -107,6 +107,9 @@ class FlecsConfig:
                                       # directions.truncated_inverse_direction_floored)
     participation: float = 1.0        # per-round client sampling probability
     sampling: str = "bernoulli"       # "bernoulli" | "choice" (exact-k)
+    use_kernel: bool = False          # fused Pallas compressor path
+                                      # (repro.kernels.compressor;
+                                      # interpret-mode off-TPU, bit-identical)
 
     @property
     def rho_val(self):
@@ -207,17 +210,18 @@ def init_state(w0: jnp.ndarray, n_workers: int) -> FlecsState:
 
 
 def _round_bits(grad_spec: CompressorSpec, hess_spec: CompressorSpec,
-                d: int, m: int):
+                d: int, m: int, use_kernel: bool = False):
     """Per-participating-worker uplink bits of one round (traced)."""
-    return (spec_bits(grad_spec, d)              # c_k^i
-            + spec_bits(hess_spec, d * m)        # C_k^i (dim-aware top-k)
-            + 32.0 * m * m)                      # M_k^i (float32)
+    return (spec_bits(grad_spec, d, use_kernel)      # c_k^i
+            + spec_bits(hess_spec, d * m, use_kernel)  # C_k^i (dim-aware)
+            + 32.0 * m * m)                          # M_k^i (float32)
 
 
 def bits_per_round(cfg: FlecsConfig, d: int) -> float:
     """Deterministic per-participating-worker uplink bits of one round."""
     return float(_round_bits(spec_from_name(cfg.grad_compressor),
-                             spec_from_name(cfg.hess_compressor), d, cfg.m))
+                             spec_from_name(cfg.hess_compressor), d, cfg.m,
+                             cfg.use_kernel))
 
 
 def hparams_round_bits(cfg: FlecsConfig, hp: FlecsHParams, d: int):
@@ -233,14 +237,16 @@ def hparams_round_bits(cfg: FlecsConfig, hp: FlecsHParams, d: int):
 
 def _worker_messages(local_grad: Callable, local_hvp: Callable,
                      grad_spec: CompressorSpec, hess_spec: CompressorSpec,
-                     w, h, B, S, k_g, k_h, k_q, k_c):
+                     w, h, B, S, k_g, k_h, k_q, k_c,
+                     use_kernel: bool = False):
     """Worker compute phase of Algorithm 1, vmapped over the federation.
 
     Returns (c_all [n,d], M_all [n,m,m], C_all [n,d,m], BS_all [n,d,m]) at
     the current iterate ``w`` against the current shifts/approximations —
     shared verbatim by the synchronous round and the async (buffered) step,
     so the two consume identical key streams and are trace-equivalent at
-    zero delay.  The compressor specs may be traced (sweep axes).
+    zero delay.  The compressor specs may be traced (sweep axes);
+    ``use_kernel`` (static) selects the fused Pallas compressor path.
     """
     n = h.shape[0]
 
@@ -248,9 +254,9 @@ def _worker_messages(local_grad: Callable, local_hvp: Callable,
         g = local_grad(w, i, jax.random.fold_in(k_g, i))
         Y = local_hvp(w, S, i, jax.random.fold_in(k_h, i))
         M = S.T @ Y                                     # m x m (exact)
-        c = compress(grad_spec, kq, g - hk)             # compressed grad diff
+        c = compress(grad_spec, kq, g - hk, use_kernel)   # grad diff
         BS = Bk @ S
-        Cm = compress(hess_spec, kc, Y - BS)            # compressed hess diff
+        Cm = compress(hess_spec, kc, Y - BS, use_kernel)  # hess diff
         return c, M, Cm, BS
 
     ks_q = jax.random.split(k_q, n)
@@ -304,7 +310,8 @@ def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
 
     c_all, M_all, C_all, BS_all = _worker_messages(
         local_grad, local_hvp, hp.grad_spec, hp.hess_spec,
-        state.w, state.h, state.B, S, k_g, k_h, k_q, k_c)
+        state.w, state.h, state.B, S, k_g, k_h, k_q, k_c,
+        cfg.use_kernel)
 
     # --- server -----------------------------------------------------------
     g_tilde_i = c_all + state.h                          # [n, d]
@@ -324,7 +331,8 @@ def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
     w_new = state.w + hp.alpha * p
     h_new = state.h + hp.gamma * mask[:, None] * c_all
 
-    round_bits = _round_bits(hp.grad_spec, hp.hess_spec, d, m)
+    round_bits = _round_bits(hp.grad_spec, hp.hess_spec, d, m,
+                             cfg.use_kernel)
     bits_new = (state.bits_per_node
                 + mask.astype(state.bits_per_node.dtype) * round_bits)
     new_state = FlecsState(w_new, h_new, B_new, state.k + 1, bits_new)
@@ -509,7 +517,8 @@ def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
         def compute(_):
             return _worker_messages(
                 local_grad, local_hvp, hp.grad_spec, hp.hess_spec,
-                state.w, state.h, state.B, S, k_g, k_h, k_q, k_c)
+                state.w, state.h, state.B, S, k_g, k_h, k_q, k_c,
+                cfg.use_kernel)
 
         c_all, M_all, C_all, BS_all = jax.lax.cond(
             jnp.any(send_mask > 0), compute,
@@ -536,7 +545,8 @@ def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
                              lambda _: state.B, None)
         h_new = state.h + hp.gamma * arrived[:, None] * msg["c"]
 
-        round_bits = _round_bits(hp.grad_spec, hp.hess_spec, d, m)
+        round_bits = _round_bits(hp.grad_spec, hp.hess_spec, d, m,
+                                 cfg.use_kernel)
         bits_new = (state.bits_per_node
                     + arrived.astype(state.bits_per_node.dtype) * round_bits)
 

@@ -1,0 +1,36 @@
+"""Oracle for the fused compressor kernels.
+
+Unlike the other kernel packages' hand-written oracles, this ref
+DELEGATES to the production jnp path (``repro.core.compressors``)
+instead of re-implementing it: the fused kernels' whole contract is
+"drop-in replacement for ``compress``/``spec_bits``", so the reference
+the differential tests compare against must be the very functions those
+entry points dispatch to with ``use_kernel=False`` — a re-implementation
+could drift from production and the tests would pin the wrong thing.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.compressors import (_dither, _topk, dither_spec, spec_bits,
+                                    topk_spec)
+
+
+def fused_dither_ref(key, x, s):
+    """(quantized, payload bits) via the production jnp path."""
+    s = jnp.asarray(s, jnp.float32)
+    return _dither(key, x, s), spec_bits(dither_spec(s), x.size)
+
+
+def fused_topk_ref(key, x, frac):
+    """(sparsified, payload bits) via the production jnp path."""
+    frac = jnp.asarray(frac, jnp.float32)
+    return _topk(key, x, frac), spec_bits(topk_spec(frac), x.size)
+
+
+def dither_bits_ref(s, d):
+    return spec_bits(dither_spec(jnp.asarray(s, jnp.float32)), d)
+
+
+def topk_bits_ref(frac, d):
+    return spec_bits(topk_spec(jnp.asarray(frac, jnp.float32)), d)

@@ -105,6 +105,7 @@ class DianaConfig:
     compressor: str = "dither64"      # name / Compressor / CompressorSpec
     participation: float = 1.0
     sampling: str = "bernoulli"       # "bernoulli" | "choice" (exact-k)
+    use_kernel: bool = False          # fused Pallas compressor path
 
 
 class DianaHParams(NamedTuple):
@@ -159,7 +160,7 @@ def make_diana_sweep_step(cfg: DianaConfig, local_grad: Callable):
 
         def worker(i, hk, kq):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
-            return compress(hp.spec, kq, g - hk)
+            return compress(hp.spec, kq, g - hk, cfg.use_kernel)
 
         ks = jax.random.split(k_q, n)
         c = jax.vmap(worker)(jnp.arange(n), state.h, ks)
@@ -167,7 +168,8 @@ def make_diana_sweep_step(cfg: DianaConfig, local_grad: Callable):
         w = state.w - hp.alpha * g_tilde
         h = state.h + hp.gamma * mask[:, None] * c
         bits = state.bits_per_node + mask.astype(
-            state.bits_per_node.dtype) * spec_bits(hp.spec, d)
+            state.bits_per_node.dtype) * spec_bits(hp.spec, d,
+                                                   cfg.use_kernel)
         new = DianaState(w, h, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
                      "n_active": jnp.sum(mask),
@@ -249,7 +251,7 @@ def make_diana_async_sweep_step(cfg: DianaConfig, local_grad: Callable,
 
         def worker(i, hk, kq):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
-            return compress(hp.spec, kq, g - hk)
+            return compress(hp.spec, kq, g - hk, cfg.use_kernel)
 
         # skip the n gradient evaluations on rounds where everyone is busy
         c = jax.lax.cond(
@@ -265,7 +267,8 @@ def make_diana_async_sweep_step(cfg: DianaConfig, local_grad: Callable,
 
         h = state.h + hp.gamma * arrived[:, None] * msg["c"]
         bits = state.bits_per_node + arrived.astype(
-            state.bits_per_node.dtype) * spec_bits(hp.spec, d)
+            state.bits_per_node.dtype) * spec_bits(hp.spec, d,
+                                                   cfg.use_kernel)
         acc_g, acc_n, g_tilde, flush, reset = fedbuff_accumulate(
             state.acc_g, state.acc_n, msg["c"] + state.h, arrived,
             ahp.buffer_k)
@@ -318,6 +321,7 @@ class FedNLConfig:
     mu: float = 1e-3
     participation: float = 1.0
     sampling: str = "bernoulli"
+    use_kernel: bool = False          # fused Pallas compressor path
 
 
 class FedNLHParams(NamedTuple):
@@ -368,7 +372,7 @@ def make_fednl_sweep_step(cfg: FedNLConfig, local_grad: Callable,
         def worker(i, Hk, kc):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
             Hi = local_hessian(state.w, i)
-            D = compress(hp.spec, kc, Hi - Hk)
+            D = compress(hp.spec, kc, Hi - Hk, cfg.use_kernel)
             return g, D
 
         ks = jax.random.split(k_c, n)
@@ -384,8 +388,8 @@ def make_fednl_sweep_step(cfg: FedNLConfig, local_grad: Callable,
         w = state.w + hp.alpha * p
         # uncompressed gradient + dimension-aware compressed Hessian diff
         bits = state.bits_per_node + mask.astype(
-            state.bits_per_node.dtype) * (d * 32.0
-                                          + spec_bits(hp.spec, d * d))
+            state.bits_per_node.dtype) * (
+                d * 32.0 + spec_bits(hp.spec, d * d, cfg.use_kernel))
         new = FedNLState(w, H_new, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_bar),
                      "n_active": jnp.sum(mask),

@@ -57,6 +57,20 @@ RULE_FIXTURES = {
         class DemoHParams(NamedTuple):
             alpha: float
         """),
+    # a kernel launcher in a package with no ref.py oracle (the demo/
+    # package does not exist on disk, so the pairing probe fails)
+    "R6": ("src/repro/kernels/demo/demo.py", """
+        import jax
+        from jax.experimental import pallas as pl
+
+        def _kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def launch(x):
+            return pl.pallas_call(
+                _kernel,
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+        """),
 }
 
 
@@ -157,6 +171,9 @@ def test_r3_sees_positional_namedtuple_construction():
 def test_r4_flags_only_shimmed_names():
     ok = "from jax.experimental import pallas as pl\n"
     assert lint_source(ok, "src/repro/kernels/demo.py") == []
+    # ... including at kernel-package depth, where R6 also applies: a
+    # pallas IMPORT alone (no pallas_call launch) trips neither rule
+    assert lint_source(ok, "src/repro/kernels/demo/demo.py") == []
     bad = "import jax\nsm = jax.experimental.shard_map.shard_map\n"
     assert rules_fired(lint_source(bad, CORE)) == {"R4"}
     bad2 = "import jax\nn = jax.lax.axis_size('data')\n"
@@ -164,6 +181,48 @@ def test_r4_flags_only_shimmed_names():
     # compat.py itself is the sanctioned probe site
     exempt = "from jax.experimental.shard_map import shard_map\n"
     assert lint_source(exempt, "src/repro/compat.py") == []
+
+
+def test_r6_missing_ref_fires_once_and_names_the_oracle():
+    path, src = RULE_FIXTURES["R6"]
+    findings = lint_source(textwrap.dedent(src), path)
+    assert [f.rule for f in findings] == ["R6"]          # exactly once
+    assert "ref.py" in findings[0].message
+
+
+def test_r6_registration_branch(tmp_path, monkeypatch):
+    """With the oracle present, R6 checks the differential-test registry:
+    a kernel package not mentioned in tests/test_kernels.py fires; a
+    mentioned one is clean; an absent registry file skips the check."""
+    from repro.analysis import rules_kernels
+    pkg = tmp_path / "src" / "repro" / "kernels" / "demo"
+    pkg.mkdir(parents=True)
+    (pkg / "ref.py").write_text("def launch_ref(x):\n    return x\n")
+    registry = tmp_path / "tests" / "test_kernels.py"
+    registry.parent.mkdir()
+    registry.write_text("from repro.kernels.other.ops import thing\n")
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(rules_kernels, "TEST_FILE",
+                        registry.relative_to(tmp_path))
+    path, src = RULE_FIXTURES["R6"]
+    findings = lint_source(textwrap.dedent(src), path)
+    assert rules_fired(findings) == {"R6"}
+    assert "differential test" in findings[0].message
+    # registering the package (any mention of repro.kernels.demo) clears it
+    registry.write_text("from repro.kernels.demo.ops import launch\n")
+    assert lint_source(textwrap.dedent(src), path) == []
+    # no registry file at all: pairing check only (vendored-subtree mode)
+    registry.unlink()
+    assert lint_source(textwrap.dedent(src), path) == []
+
+
+def test_r6_real_kernel_packages_are_paired(repo_root):
+    """Every shipped kernel package passes R6 from the repo root: the
+    kernel/ops/ref triple exists and test_kernels.py registers it."""
+    from repro.analysis import lint_paths
+    findings = lint_paths([str(repo_root / "src" / "repro" / "kernels")],
+                          root=repo_root, only=["R6"])
+    assert [f.format() for f in findings] == []
 
 
 def test_r5_snapshot_matches_tree_and_detects_drift():

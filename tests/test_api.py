@@ -31,7 +31,8 @@ from repro.core.driver import (StalenessSchedule, participation_mask,
 from repro.core.flecs import (FlecsConfig, hparam_grid, init_state,
                               make_flecs_step)
 from repro.data.logreg import make_problem
-from repro.optim.baselines import (DianaConfig, diana_hparam_grid,
+from repro.optim.baselines import (DianaConfig, FedNLConfig,
+                                   diana_hparam_grid,
                                    gd_hparam_grid, init_diana,
                                    init_diana_async, init_fednl, init_gd,
                                    make_diana_async_step, make_diana_step,
@@ -294,6 +295,34 @@ def test_fig1_plan_single_compile_and_matches_legacy():
     # 32·d grad bits, CGD ⌈log2 129⌉·d = 8·d
     m1 = np.asarray(res.traces["m1"]["bits_per_node"])[:, 0, 0]
     assert m1[0] - m1[1] == (32 - 8) * D
+
+
+def test_use_kernel_plan_single_compile_and_exact_ledgers():
+    """The fused Pallas compressor path threads through run_plan as a
+    config flag: still ONE compiled program per figure, and — because the
+    kernels are bit-identical to the jnp reference — the bit ledgers
+    match EXACTLY and the trajectories match to float tolerance."""
+    def _plan(use_kernel):
+        return ExperimentPlan(
+            problem=PROB,
+            runs=(MethodRun("flecs_cgd",
+                            cfg=FlecsConfig(use_kernel=use_kernel)),
+                  MethodRun("diana",
+                            cfg=DianaConfig(use_kernel=use_kernel)),
+                  MethodRun("fednl",
+                            cfg=FedNLConfig(use_kernel=use_kernel))),
+            iters=5, seed=0)
+    api.reset_plan_stats()
+    res_k = run_plan(_plan(True))
+    assert api.plan_compiles() == 1
+    res_j = run_plan(_plan(False))
+    for lab in ("flecs_cgd", "diana", "fednl"):
+        np.testing.assert_array_equal(
+            np.asarray(res_k.traces[lab]["bits_per_node"]),
+            np.asarray(res_j.traces[lab]["bits_per_node"]), err_msg=lab)
+        np.testing.assert_allclose(
+            np.asarray(res_k.traces[lab]["F"]),
+            np.asarray(res_j.traces[lab]["F"]), rtol=1e-6, err_msg=lab)
 
 
 def test_participation_plan_single_compile():

@@ -1,15 +1,39 @@
 """Pallas kernel validation (interpret mode): shape/dtype sweeps vs the
-pure-jnp oracles in each kernel's ref.py."""
+pure-jnp oracles in each kernel's ref.py.
+
+The fused-compressor section pins the BIT-IDENTITY contract of
+``repro.kernels.compressor``: kernel and jnp reference are compared
+within a consistent evaluation context (both eager, or both inside one
+jit) — that is the drop-in guarantee ``compressors.compress(...,
+use_kernel=True)`` relies on.  Comparing a jitted program against an
+eager one is outside the contract (XLA fusion may perturb last-ulp
+results of either path).  The hypothesis property tests run only when
+hypothesis is installed (requirements-dev.txt; CI always has it) — the
+module must not importorskip wholesale, the non-property kernel tests
+are tier-1 either way.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import compressors
+from repro.kernels.compressor import ops as comp_ops
+from repro.kernels.compressor.ops import (dither_bits_fused, fused_dither,
+                                          fused_topk, topk_bits_fused)
+from repro.kernels.compressor.ref import (dither_bits_ref, fused_dither_ref,
+                                          fused_topk_ref, topk_bits_ref)
 from repro.kernels.dither.dither import dither_decode, dither_encode
 from repro.kernels.dither.ops import dequantize, quantize
 from repro.kernels.dither.ref import dither_decode_ref, dither_encode_ref
 from repro.kernels.flash_attention.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 @pytest.mark.parametrize("R,C,br,s", [(16, 128, 8, 127), (32, 256, 8, 63),
@@ -84,3 +108,193 @@ def test_flash_attention_block_size_invariance(rng):
     for o in outs[1:]:
         np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
                                    rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused compressor kernels (repro.kernels.compressor) — bit-identity suite
+# ---------------------------------------------------------------------------
+
+def _exact(kernel_pair, ref_pair):
+    """Assert (values, bits) bit-identity of a kernel/ref result pair."""
+    out_k, bits_k = kernel_pair
+    out_r, bits_r = ref_pair
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+    assert out_k.dtype == out_r.dtype
+    assert float(bits_k) == float(bits_r)
+
+
+# d = 1, d < lane width, d = lane, d = lane + 1 (odd block), d not a
+# multiple of 128, multi-row, multi-dim
+EDGE_SHAPES = [(1,), (5,), (128,), (129,), (1000,), (33, 7), (4, 5, 6)]
+
+
+@pytest.mark.parametrize("shape", EDGE_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s", [1.0, 127.0])
+def test_fused_dither_matches_ref(rng, shape, dtype, s):
+    x = jnp.asarray(rng.normal(size=shape) * 10, dtype)
+    key = jax.random.key(int(np.prod(shape)))
+    _exact(fused_dither(key, x, s), fused_dither_ref(key, x, s))
+
+
+@pytest.mark.parametrize("shape", EDGE_SHAPES)
+@pytest.mark.parametrize("frac", [0.01, 0.5, 1.0])
+def test_fused_topk_matches_ref(rng, shape, frac):
+    x = jnp.asarray(rng.normal(size=shape) * 10, jnp.float32)
+    key = jax.random.key(0)
+    _exact(fused_topk(key, x, frac), fused_topk_ref(key, x, frac))
+
+
+def test_fused_topk_ties_and_rounding_edges(rng):
+    """Integer-valued magnitudes make massive tie groups, and frac·d is
+    placed exactly at/around ceil() boundaries — the reference's
+    lowest-index tie-breaking and k = ceil(frac·d) rounding must be
+    reproduced exactly."""
+    key = jax.random.key(0)
+    for d, frac in [(7, 1 / 7), (7, 2 / 7 - 1e-7), (12, 0.25),
+                    (12, 0.2500001), (128, 1.0), (129, 0.5), (200, 0.015)]:
+        x = jnp.asarray(rng.integers(-3, 4, size=d), jnp.float32)
+        _exact(fused_topk(key, x, frac), fused_topk_ref(key, x, frac))
+
+
+def test_fused_zero_vector(rng):
+    """All-zero input: dither's norm guard (norm=0 -> 1) and top-k's
+    all-tied-at-zero threshold both match the reference exactly."""
+    z = jnp.zeros((257,), jnp.float32)
+    key = jax.random.key(3)
+    _exact(fused_dither(key, z, 63.0), fused_dither_ref(key, z, 63.0))
+    _exact(fused_topk(key, z, 0.25), fused_topk_ref(key, z, 0.25))
+
+
+def test_fused_nonfinite_policy(rng):
+    """Pinned inf/nan policy — identical to the jnp reference:
+
+    * dither: a non-finite coordinate poisons the GLOBAL ∞-norm, so every
+      output element becomes NaN (one bad coordinate poisons the whole
+      message — callers must sanitize upstream);
+    * top-k: |NaN|'s bit pattern sorts above +inf (matching jnp.sort's
+      NaN-last ascending order), so non-finite coordinates occupy top
+      slots and displace finite values — but NaN itself is never
+      emitted, because it fails both the `>` and `==` threshold tests.
+    """
+    key = jax.random.key(7)
+    xi = jnp.asarray([1.0, np.inf, 3.0, -2.0, 0.5, 0.0, 7.0, -np.inf],
+                     jnp.float32)
+    xn = jnp.asarray([1.0, np.nan, 3.0, -2.0], jnp.float32)
+    for x in (xi, xn):
+        out_k, bits_k = fused_dither(key, x, 15.0)
+        out_r, bits_r = fused_dither_ref(key, x, 15.0)
+        assert bool(jnp.all(jnp.isnan(out_k)))           # poisons all
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+        assert float(bits_k) == float(bits_r)
+        t_k, tb_k = fused_topk(key, x, 0.5)
+        t_r, tb_r = fused_topk_ref(key, x, 0.5)
+        np.testing.assert_array_equal(np.asarray(t_k), np.asarray(t_r))
+        assert float(tb_k) == float(tb_r)
+    # k=2 over [1, nan, 3, -2]: NaN claims a slot (it outranks 3 in the
+    # threshold search) yet is dropped by the keep mask, so only 3.0
+    # survives — one slot is burned, exactly as in the reference.
+    kept, _ = fused_topk(key, xn, 0.5)
+    np.testing.assert_array_equal(np.asarray(kept),
+                                  np.asarray([0.0, 0.0, 3.0, 0.0]))
+
+
+@pytest.mark.parametrize("s", [1.0, 64.0, 1000.0])
+@pytest.mark.parametrize("d", [1, 129, 10_000])
+def test_bits_only_kernels_match_spec_bits(s, d):
+    assert float(dither_bits_fused(s, d)) == float(dither_bits_ref(s, d))
+    for frac in (0.01, 0.37, 1.0):
+        assert (float(topk_bits_fused(frac, d))
+                == float(topk_bits_ref(frac, d)))
+
+
+@pytest.mark.parametrize("name", ["identity", "dither64", "natural",
+                                  "topk0.1"])
+def test_compress_dispatch_kernel_equals_jnp(rng, name):
+    """`compress`/`spec_bits` with use_kernel=True are drop-ins for the
+    jnp path: exact values and exact bits, eagerly and under jit."""
+    spec = compressors.spec_from_name(name)
+    x = jnp.asarray(rng.normal(size=(300,)), jnp.float32)
+    key = jax.random.key(1)
+    a = compressors.compress(spec, key, x, False)
+    b = compressors.compress(spec, key, x, True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert (float(compressors.spec_bits(spec, x.size, False))
+            == float(compressors.spec_bits(spec, x.size, True)))
+    f0 = jax.jit(lambda k, x: compressors.compress(spec, k, x, False))
+    f1 = jax.jit(lambda k, x: compressors.compress(spec, k, x, True))
+    np.testing.assert_array_equal(np.asarray(f0(key, x)),
+                                  np.asarray(f1(key, x)))
+
+
+def test_fused_vmap_jit_switch(rng):
+    """The kernel path survives the sweep engine's composition: lax.switch
+    dispatch inside jit(vmap(...)) over a batch of keys — gridless
+    kernels are vmap-safe (no program_id to shift)."""
+    xs = jnp.asarray(rng.normal(size=(8, 200)), jnp.float32)
+    keys = jax.random.split(jax.random.key(3), 8)
+    for name in ("dither64", "topk0.25"):
+        spec = compressors.spec_from_name(name)
+        f0 = jax.jit(jax.vmap(
+            lambda k, x: compressors.compress(spec, k, x, False)))
+        f1 = jax.jit(jax.vmap(
+            lambda k, x: compressors.compress(spec, k, x, True)))
+        np.testing.assert_array_equal(np.asarray(f0(keys, xs)),
+                                      np.asarray(f1(keys, xs)))
+
+
+def test_oversize_and_unsupported_dtype_fall_back(rng, monkeypatch):
+    """Tensors the kernels reject (too large for one VMEM block, or a
+    non-float dtype) silently keep the jnp path — and stay exact,
+    because the fallback IS the reference."""
+    monkeypatch.setattr(comp_ops, "MAX_FUSED_ELEMS", 64)
+    x = jnp.asarray(rng.normal(size=(200,)), jnp.float32)
+    key = jax.random.key(2)
+    assert not comp_ops.supports(x)
+    spec = compressors.spec_from_name("dither64")
+    a = compressors.compress(spec, key, x, False)
+    b = compressors.compress(spec, key, x, True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    small = x[:32]
+    assert comp_ops.supports(small)
+    assert not comp_ops.supports(small.astype(jnp.int32))
+    assert not comp_ops.supports(jnp.zeros((0,), jnp.float32))
+
+
+if HAVE_HYPOTHESIS:
+    finite_vec = st.lists(
+        st.floats(-1e6, 1e6, allow_nan=False, width=32),
+        min_size=1, max_size=300).map(
+            lambda xs: np.asarray(xs, np.float32))
+
+    @settings(max_examples=30, deadline=None)
+    @given(finite_vec, st.sampled_from([1, 3, 7, 15, 63, 127, 511]),
+           st.integers(0, 2**31 - 1))
+    def test_fused_dither_property(x, s, seed):
+        key = jax.random.key(seed)
+        x = jnp.asarray(x)
+        out_k, bits_k = fused_dither(key, x, float(s))
+        out_r, bits_r = fused_dither_ref(key, x, float(s))
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+        assert float(bits_k) == float(bits_r)
+
+    @settings(max_examples=30, deadline=None)
+    @given(finite_vec, st.floats(1e-3, 1.0, allow_nan=False),
+           st.booleans())
+    def test_fused_topk_property(x, frac, quantize_ties):
+        if quantize_ties:                       # force big tie groups
+            x = np.round(x / (np.max(np.abs(x)) + 1e-9) * 3)
+        key = jax.random.key(0)
+        x = jnp.asarray(x)
+        out_k, bits_k = fused_topk(key, x, float(frac))
+        out_r, bits_r = fused_topk_ref(key, x, float(frac))
+        np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out_r))
+        assert float(bits_k) == float(bits_r)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev)")
+    def test_fused_dither_property():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed (requirements-dev)")
+    def test_fused_topk_property():
+        pass
