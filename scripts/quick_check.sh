@@ -17,10 +17,12 @@ shards=2
 # engine files dominate); files not listed fall into shard 0/1 alternately
 shard0="tests/test_flecs_convergence.py tests/test_comm_accounting.py \
 tests/test_sharding_and_loss.py tests/test_checkpoint_and_configs.py \
-tests/test_compressors.py tests/test_system.py"
+tests/test_compressors.py tests/test_system.py tests/test_hierarchy.py \
+tests/test_cohort.py"
 shard1="tests/test_driver.py tests/test_async_aggregation.py \
 tests/test_kernels.py tests/test_attention_and_mixers.py \
-tests/test_core_algebra.py tests/test_models_smoke.py"
+tests/test_core_algebra.py tests/test_models_smoke.py \
+tests/test_sharded_equivalence.py"
 groups=("$shard0" "$shard1")
 i=0
 for f in tests/test_*.py; do

@@ -1,0 +1,94 @@
+"""R7 — cohort-subsampled scan bodies must stay O(cohort), never O(N).
+
+The whole point of the cohort engines (``flecs.make_flecs_cohort_sweep_
+step`` and friends) is that per-round compute and memory are independent
+of the registered population: a round gathers the sampled cohort's rows,
+computes on [K, ...] arrays, and scatter-updates the persistent per-client
+state.  One ``jnp.zeros((n_total, ...))`` — or a participation draw over
+the full population — inside the scan body silently re-couples every
+round to N and voids the scaling claim ``benchmarks/scaling_bench.py``
+gates.
+
+The rule: within the module's traced set (``rules_trace.traced_scopes``),
+any scope that belongs to a cohort engine — the root factory or the
+function itself carries ``cohort`` in its name — must not call an
+ALLOCATING function (array constructors and random draws) whose arguments
+reference a population-sized identifier (``n_total`` / ``n_global`` /
+``n_pop`` / ``population``).  ``jax.random.split`` is deliberately NOT in
+the allocating set: the sharded engine's key-gather idiom
+(``split(k_q, n_total)[ids]``) lives in helpers the cohort path shares,
+and the cohort engines sidestep it with ``fold_in`` keys
+(``fold_keys=True``) — the helper is linted under its dense/sharded root.
+
+Persistent STATE may of course be [N, ...] (that is the ledger contract);
+the rule only fires inside traced scan bodies, where such an array would
+be a per-round intermediate.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable
+
+from repro.analysis.engine import Finding, ModuleContext, rule
+from repro.analysis.rules_trace import _in_scope, traced_scopes
+
+#: Allocating calls: array constructors + random DRAWS (shape-taking).
+ALLOC_FNS = {"zeros", "ones", "full", "empty",
+             "uniform", "normal", "bernoulli", "randint"}
+
+#: Identifiers that (by repo convention) name the registered population.
+POPULATION_NAME_RE = re.compile(r"^(n_total|n_global|n_pop|population)$")
+
+
+def _alloc_name(call: ast.Call):
+    f = call.func
+    if isinstance(f, ast.Name) and f.id in ALLOC_FNS:
+        return f.id
+    if isinstance(f, ast.Attribute) and f.attr in ALLOC_FNS:
+        return f.attr
+    return None
+
+
+def _population_refs(call: ast.Call):
+    refs = set()
+    for arg in list(call.args) + [kw.value for kw in call.keywords]:
+        for node in ast.walk(arg):
+            name = None
+            if isinstance(node, ast.Name):
+                name = node.id
+            elif isinstance(node, ast.Attribute):
+                name = node.attr
+            if name is not None and POPULATION_NAME_RE.match(name):
+                refs.add(name)
+    return sorted(refs)
+
+
+@rule("R7", "cohort-scan-bodies-stay-population-free",
+      "cohort-engine scan bodies must not allocate full-population "
+      "[N, ...] intermediates (gather/compute/scatter over the cohort "
+      "instead)", _in_scope)
+def check_cohort_allocations(ctx: ModuleContext) -> Iterable[Finding]:
+    findings = []
+    seen = set()
+    for root, fn in traced_scopes(ctx):
+        if "cohort" not in root and "cohort" not in getattr(fn, "name", ""):
+            continue
+        for sub in ast.walk(fn):
+            if not isinstance(sub, ast.Call) or id(sub) in seen:
+                continue
+            seen.add(id(sub))
+            alloc = _alloc_name(sub)
+            if alloc is None:
+                continue
+            refs = _population_refs(sub)
+            if refs:
+                findings.append(ctx.finding(
+                    "R7", sub,
+                    f"`{alloc}(...)` sized by population identifier(s) "
+                    f"{', '.join(refs)} inside cohort scan body "
+                    f"{fn.name!r} (reached from {root!r}) — per-round "
+                    "arrays must be [cohort, ...]; gather the cohort's "
+                    "rows, compute, and scatter-update the persistent "
+                    "state instead"))
+    return findings

@@ -18,25 +18,44 @@ import; import it explicitly.
 from repro.core.compressors import (Compressor, CompressorSpec, compress,
                                     get_compressor, psum_level_cap,
                                     spec_bits, spec_bits_many,
-                                    spec_from_name, spec_omega, stack_specs)
-from repro.core.driver import (damped_alpha, freeze_on_bit_budget,
-                               hparams_bit_budget, iters_for_bit_budget,
-                               participation_mask, resolve_participation,
-                               run_async_sweep, run_experiment, run_sweep,
-                               sweep_keys, sweep_program)
-from repro.core.flecs import (FlecsAsyncHParams, FlecsConfig, FlecsHParams,
-                              FlecsState, async_hparam_grid, bits_per_round,
-                              hparam_grid, hparams_round_bits, init_state,
-                              make_flecs_step, make_flecs_sweep_step)
+                                    spec_commutes_with_sum, spec_from_name,
+                                    spec_omega, stack_specs)
+from repro.core.driver import (COHORT_SALT, cohort_indices, damped_alpha,
+                               freeze_on_bit_budget, hparams_bit_budget,
+                               iters_for_bit_budget, participation_mask,
+                               resolve_participation, run_async_sweep,
+                               run_experiment, run_sharded_sweep, run_sweep,
+                               sweep_keys, sweep_program, worker_mesh)
+from repro.core.flecs import (FlecsAsyncHParams, FlecsCohortState,
+                              FlecsConfig, FlecsHParams, FlecsState,
+                              async_hparam_grid, bits_per_round,
+                              hparam_grid, hparams_round_bits,
+                              init_cohort_state, init_state,
+                              make_flecs_cohort_sweep_step,
+                              make_flecs_sharded_sweep_step,
+                              make_flecs_step, make_flecs_sweep_step,
+                              sharded_state_specs)
+from repro.core.hierarchy import (EDGE_SALT, HierarchyConfig, charge_edges,
+                                  edge_combine, edge_combine_cohort,
+                                  edge_of, edge_round_bits, init_edge_bits,
+                                  validate_hierarchy)
 from repro.core.sketch import sketch
 
 __all__ = ["Compressor", "CompressorSpec", "compress", "get_compressor",
-           "psum_level_cap", "spec_bits", "spec_bits_many", "spec_from_name",
-           "spec_omega", "stack_specs",
-           "FlecsAsyncHParams", "FlecsConfig", "FlecsHParams", "FlecsState",
-           "async_hparam_grid", "bits_per_round", "damped_alpha",
+           "psum_level_cap", "spec_bits", "spec_bits_many",
+           "spec_commutes_with_sum", "spec_from_name", "spec_omega",
+           "stack_specs",
+           "COHORT_SALT", "EDGE_SALT", "FlecsAsyncHParams",
+           "FlecsCohortState", "FlecsConfig", "FlecsHParams", "FlecsState",
+           "HierarchyConfig", "async_hparam_grid", "bits_per_round",
+           "charge_edges", "cohort_indices", "damped_alpha", "edge_combine",
+           "edge_combine_cohort", "edge_of", "edge_round_bits",
            "freeze_on_bit_budget", "hparam_grid", "hparams_bit_budget",
-           "hparams_round_bits", "init_state", "iters_for_bit_budget",
+           "hparams_round_bits", "init_cohort_state", "init_edge_bits",
+           "init_state", "iters_for_bit_budget",
+           "make_flecs_cohort_sweep_step", "make_flecs_sharded_sweep_step",
            "make_flecs_step", "make_flecs_sweep_step", "participation_mask",
            "resolve_participation", "run_async_sweep", "run_experiment",
-           "run_sweep", "sketch", "sweep_keys", "sweep_program"]
+           "run_sharded_sweep", "run_sweep", "sharded_state_specs",
+           "sketch", "sweep_keys", "sweep_program", "validate_hierarchy",
+           "worker_mesh"]

@@ -143,7 +143,8 @@ def _broadcast(hp, tau, buffer_k, wrapper):
 
 def _flecs_grid(alphas=(1.0,), gammas=(1.0,), betas=(1.0,),
                 grad_levels=(64.0,), hess_levels=(64.0,), ps=None,
-                grad_specs=None, hess_specs=None) -> flecs.FlecsHParams:
+                grad_specs=None, hess_specs=None,
+                edge_levels=None) -> flecs.FlecsHParams:
     """FLECS grid with optional explicit spec arguments.
 
     ``grad_specs`` / ``hess_specs`` take a ``CompressorSpec``:
@@ -152,11 +153,17 @@ def _flecs_grid(alphas=(1.0,), gammas=(1.0,), betas=(1.0,),
       as a grid axis (the other axes must then be scalar);
     * a scalar spec pins the compressor for every grid point (e.g.
       ``identity`` gradients for plain FLECS while ``ps`` sweeps).
+
+    ``edge_levels`` adds the traced backhaul-compression axis of
+    hierarchical aggregation (requires a cfg with ``hierarchy`` set; see
+    ``flecs.hparam_grid``).
     """
+    if grad_specs is None and hess_specs is None:
+        return flecs.hparam_grid(alphas, gammas, grad_levels, betas=betas,
+                                 hess_levels=hess_levels, ps=ps,
+                                 edge_levels=edge_levels)
     hp = flecs.hparam_grid(alphas, gammas, grad_levels, betas=betas,
                            hess_levels=hess_levels, ps=ps)
-    if grad_specs is None and hess_specs is None:
-        return hp
     # an explicit spec REPLACES its slot's level axis — a multi-point
     # level axis alongside it would be silently discarded
     if grad_specs is not None and len(grad_levels) > 1:
@@ -186,10 +193,18 @@ def _flecs_grid(alphas=(1.0,), gammas=(1.0,), betas=(1.0,),
             lambda a: jnp.broadcast_to(jnp.asarray(a), (Gf,)), spec)
 
     scal = lambda a: jnp.broadcast_to(a, (Gf,))            # noqa: E731
-    return flecs.FlecsHParams(
+    hp = flecs.FlecsHParams(
         scal(hp.alpha), scal(hp.gamma), scal(hp.beta),
         fix(grad_specs, hp.grad_spec), fix(hess_specs, hp.hess_spec),
         None if hp.p is None else scal(hp.p))
+    if edge_levels is None:
+        return hp
+    # cross with the backhaul axis, base-major (as flecs.hparam_grid does)
+    from repro.core.compressors import dither_spec
+    E = len(edge_levels)
+    hp = jax.tree.map(lambda leaf: jnp.repeat(leaf, E, axis=0), hp)
+    tiled = jnp.tile(jnp.asarray(edge_levels, jnp.float32), Gf)
+    return hp._replace(edge_spec=dither_spec(tiled))
 
 
 def _flecs_spec(name: str, default_grad: str) -> MethodSpec:
@@ -198,7 +213,7 @@ def _flecs_spec(name: str, default_grad: str) -> MethodSpec:
 
     def grid(alphas=(1.0,), gammas=(1.0,), betas=(1.0,), grad_levels=None,
              hess_levels=(64.0,), ps=None, grad_specs=None,
-             hess_specs=None):
+             hess_specs=None, edge_levels=None):
         """:func:`_flecs_grid` with the gradient compressor defaulting to
         THIS method's own — ``get_method("flecs").grid(...)`` sweeps with
         identity gradients, not FLECS-CGD's dither64."""
@@ -207,13 +222,16 @@ def _flecs_spec(name: str, default_grad: str) -> MethodSpec:
         return _flecs_grid(
             alphas, gammas, betas,
             grad_levels if grad_levels is not None else (64.0,),
-            hess_levels, ps, grad_specs, hess_specs)
+            hess_levels, ps, grad_specs, hess_specs, edge_levels)
 
     return MethodSpec(
         name=name,
         config_cls=flecs.FlecsConfig,
         default_config=default_config,
-        init=lambda prob, n, cfg: flecs.init_state(jnp.zeros(prob.d), n),
+        init=lambda prob, n, cfg: flecs.init_state(
+            jnp.zeros(prob.d), n,
+            n_edges=None if cfg.hierarchy is None
+            else cfg.hierarchy.n_edges),
         sweep_step=lambda prob, cfg: flecs.make_flecs_sweep_step(
             cfg, *prob.make_oracles()),
         grid=grid,

@@ -297,6 +297,22 @@ def spec_omega(spec: CompressorSpec, d) -> jnp.ndarray:
          lambda: jnp.float32(0.0)))
 
 
+def spec_commutes_with_sum(spec: CompressorSpec) -> jnp.ndarray:
+    """Traced predicate: is Q a LINEAR map, i.e. Q(sum_i x_i) == sum_i Q(x_i)?
+
+    Hierarchical aggregation (``repro.core.hierarchy``) and psum-style
+    sharded reductions only reproduce the flat server algebra when the
+    compressor commutes with summation.  Today that is exactly the identity
+    family (a linear sketch family — count-sketch / FetchSGD, a ROADMAP
+    item — would join it by linearity).  Random dithering and natural
+    compression are UNBIASED but not linear (stochastic rounding of a sum
+    is not the sum of roundings), and top-k is neither linear nor unbiased —
+    re-aggregating their outputs changes the estimator, which is the
+    trade-off an edge-compression sweep measures rather than a bug.
+    """
+    return spec.family == FAMILY_IDENTITY
+
+
 # ---------------------------------------------------------------------------
 # Static wrapper (the thin registry veneer over the spec algebra)
 # ---------------------------------------------------------------------------

@@ -34,6 +34,18 @@ site.  This module replaces all of those loops with **one** compiled
   communication bits that round.  The Bernoulli probability may itself be
   a **traced** sweep axis (see :func:`resolve_participation`), so a
   participation ablation is one vmapped program, not a Python loop.
+  Under cohort subsampling (:func:`cohort_indices`) the mask is drawn over
+  the COHORT axis only, so a 100k-client registered population never
+  materializes an [N] mask per round.
+* :func:`run_sharded_sweep` — the device-parallel form of
+  :func:`run_sweep`: the worker axis of the scan state is laid over a 1-D
+  device mesh (:func:`worker_mesh`) via ``repro.compat.shard_map``, and a
+  shard-aware sweep step (``flecs.make_flecs_sharded_sweep_step`` /
+  ``baselines.make_diana_sharded_sweep_step``) reconstructs the
+  full-federation aggregates with ``lax.all_gather`` + replicated server
+  math and reduces integer-exact totals with ``lax.psum`` — bit-for-bit
+  equal to the single-device engine on the same key stream
+  (tests/subproc/sharded_equiv.py pins this on forced host devices).
 * :func:`freeze_on_bit_budget` — the budget-freeze scan mode behind
   plan-level bit budgets: hparams carrying a traced ``bit_budget`` run
   until their cumulative per-node bits reach it, then the whole state
@@ -95,6 +107,9 @@ from typing import Any, Callable, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, PartitionSpec
+
+from repro.compat import shard_map
 
 
 def bits_dtype():
@@ -117,9 +132,9 @@ def _concrete_nonpositive(p) -> bool:
         return False
 
 
-def participation_mask(key, n: int, p=1.0,
-                       kind: str = "bernoulli") -> jnp.ndarray:
-    """Per-round client-sampling mask, [n] float32 in {0, 1}.
+def participation_mask(key, n: int, p=1.0, kind: str = "bernoulli",
+                       cohort: Optional[int] = None) -> jnp.ndarray:
+    """Per-round client-sampling mask, float32 in {0, 1}.
 
     p must be > 0; p >= 1 returns all-ones (full participation, key unused).
     kind="bernoulli": each worker participates independently w.p. p (the
@@ -127,13 +142,26 @@ def participation_mask(key, n: int, p=1.0,
         ``p`` may be a **traced** jax scalar — a vmappable sweep axis: the
         mask is the same ``uniform(key) < p`` draw as the static path, so a
         traced-p grid point reproduces the static run mask-for-mask.
+        A concrete sub-1 rate whose expected participant count over the
+        registered population is below one client per round (``p * n < 1``)
+        is rejected: such a run is degenerate — almost every round is a
+        no-op — and at population scale it is always a mis-scaled config
+        (p meant for n=20 reused at n=100k).
     kind="choice": exactly max(1, round(p*n)) workers, uniformly without
         replacement (FedLab-style client sampling) — every round samples at
         least one worker, even for arbitrarily small p.  The worker count is
         resolved at trace time, so choice has NO traced-p path (rejected).
-    Both kinds are pure functions of (key, n, p, kind) and trace cleanly
-    under jit/vmap/scan.
+    cohort: when cohort subsampling is active (:func:`cohort_indices`), the
+        number of client rows the round actually materializes.  The mask is
+        drawn over the COHORT axis only — shape [cohort], never [n] — so the
+        registered population size stays out of per-round memory (analysis
+        rule R7); ``n`` remains the full population, used by the degenerate-
+        rate guard above.  With ``cohort == n`` every draw matches the dense
+        [n] mask bit-for-bit (same key, same shape).
+    Both kinds are pure functions of (key, n, p, kind, cohort) and trace
+    cleanly under jit/vmap/scan.
     """
+    rows = n if cohort is None else int(cohort)
     if not isinstance(p, (int, float)):
         try:
             # any CONCRETE scalar (numpy/jax) stays on the static path
@@ -148,16 +176,22 @@ def participation_mask(key, n: int, p=1.0,
             p = jnp.asarray(p, jnp.float32)
             if _concrete_nonpositive(p):
                 raise ValueError(f"participation p must be > 0, got {p}")
-            return (jax.random.uniform(key, (n,)) < p).astype(jnp.float32)
+            return (jax.random.uniform(key, (rows,)) < p).astype(jnp.float32)
     if p <= 0:
         raise ValueError(f"participation p must be > 0, got {p}")
     if p >= 1.0:
-        return jnp.ones((n,), jnp.float32)
+        return jnp.ones((rows,), jnp.float32)
     if kind == "bernoulli":
-        return (jax.random.uniform(key, (n,)) < p).astype(jnp.float32)
+        if p * n < 1.0:
+            raise ValueError(
+                f"degenerate Bernoulli participation: p={p} over a "
+                f"population of n={n} expects p*n={p * n:.3g} < 1 "
+                f"participating client per round — raise p (or use "
+                f"kind='choice', which always samples at least one worker)")
+        return (jax.random.uniform(key, (rows,)) < p).astype(jnp.float32)
     if kind == "choice":
-        k = max(1, int(round(p * n)))
-        perm = jax.random.permutation(key, n)
+        k = max(1, int(round(p * rows)))
+        perm = jax.random.permutation(key, rows)
         return (perm < k).astype(jnp.float32)
     raise ValueError(f"unknown sampling kind: {kind!r}")
 
@@ -170,21 +204,23 @@ def validate_ps(ps) -> None:
         raise ValueError(f"participation ps must be > 0, got {list(ps)}")
 
 
-def resolve_participation(key, n: int, cfg_p, kind: str, hp_p=None):
+def resolve_participation(key, n: int, cfg_p, kind: str, hp_p=None,
+                          cohort: Optional[int] = None):
     """The sweep steps' mask entry point: a per-point hparam probability
     ``hp_p`` (possibly TRACED — the participation sweep axis) overrides the
     static config ``cfg_p`` when present.  ``hp_p is None`` keeps the
     pre-axis behavior exactly; 'choice' sampling has no traced form, so
     combining it with an hp_p axis fails loudly instead of silently
-    ignoring the axis."""
+    ignoring the axis.  ``cohort`` (cohort-subsampled steps) draws the mask
+    over the cohort axis only — see :func:`participation_mask`."""
     if hp_p is None:
-        return participation_mask(key, n, cfg_p, kind)
+        return participation_mask(key, n, cfg_p, kind, cohort)
     if kind != "bernoulli":
         raise ValueError(
             "traced participation p requires sampling='bernoulli'; "
             f"sampling={kind!r} resolves its worker count statically — drop "
             "the p axis or switch the config to bernoulli")
-    return participation_mask(key, n, hp_p, "bernoulli")
+    return participation_mask(key, n, hp_p, "bernoulli", cohort)
 
 
 def masked_mean(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
@@ -211,6 +247,41 @@ def masked_sum(x: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
 # method's synchronous key split untouched, which is what makes tau=0
 # trace-exact.  All async step makers share this constant.
 ASYNC_SALT = 0x5A17
+
+# fold_in salt for the cohort steps' per-round selection key.  Like
+# ASYNC_SALT, deriving the cohort draw from the participation key via
+# fold_in keeps each method's dense key split untouched — a cohort == N
+# run therefore consumes the identical mask/worker key stream as the
+# dense engine (the exact-equivalence contract tests/test_cohort.py pins).
+COHORT_SALT = 0xC040
+
+
+def cohort_indices(key, n_total: int, cohort: int) -> jnp.ndarray:
+    """Stratified distinct-client draw: [cohort] int32 indices into the
+    registered population, one uniform draw per contiguous stratum of
+    ``n_total // cohort`` clients.
+
+    Distinctness is by construction (one client per stratum), so cohort
+    scatter updates (``state.h.at[idx].add``) never collide and stay
+    deterministic.  O(cohort) compute and memory: no [n_total] permutation
+    or mask is ever materialized (analysis rule R7), which is what lets a
+    100k-client registered population run with per-round state independent
+    of N.  ``cohort == n_total`` degenerates to the identity ``arange`` —
+    a full-population cohort run visits exactly the dense engine's worker
+    set every round.
+    """
+    if not 1 <= cohort <= n_total:
+        raise ValueError(
+            f"cohort size must be in [1, n_total], got cohort={cohort} "
+            f"for population n_total={n_total}")
+    if n_total % cohort:
+        raise ValueError(
+            f"cohort {cohort} must divide the registered population "
+            f"{n_total}: stratified sampling draws one client per "
+            f"contiguous stratum of n_total // cohort")
+    stride = n_total // cohort
+    offs = jax.random.randint(key, (cohort,), 0, stride, dtype=jnp.int32)
+    return jnp.arange(cohort, dtype=jnp.int32) * stride + offs
 
 
 # ---------------------------------------------------------------------------
@@ -396,8 +467,9 @@ def applied_staleness(k, msg_t, arrived):
 # ---------------------------------------------------------------------------
 
 # Trace keys never down-cast by ``trace_dtype`` (bit ledgers must stay
-# exact in bits_dtype() — f32/bf16 lose integer counts).
-TRACE_KEEP_DTYPE: Sequence[str] = ("bits_per_node",)
+# exact in bits_dtype() — f32/bf16 lose integer counts).  ``edge_bits`` is
+# the hierarchical-aggregation backhaul ledger (repro.core.hierarchy).
+TRACE_KEEP_DTYPE: Sequence[str] = ("bits_per_node", "edge_bits")
 
 
 def _cast_traces(aux, trace_dtype, keep: Sequence[str]):
@@ -533,6 +605,113 @@ def run_sweep(sweep_step: Callable, hparams, state, key, iters: int,
     return jax.jit(fn)(hparams, state, sweep_keys(key, G, iters))
 
 
+# ---------------------------------------------------------------------------
+# Sharded sweeps: the worker axis over a device mesh
+# ---------------------------------------------------------------------------
+
+def worker_mesh(n_devices: Optional[int] = None,
+                axis: str = "workers") -> Mesh:
+    """1-D device mesh laying the federation's worker axis over devices.
+
+    ``n_devices=None`` uses every visible device.  CPU CI forces host
+    devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+    (which must be set before jax imports — see tests/conftest.py's
+    subprocess fixture)."""
+    devices = jax.devices()
+    if n_devices is None:
+        n_devices = len(devices)
+    if not 1 <= n_devices <= len(devices):
+        raise ValueError(
+            f"n_devices={n_devices} outside [1, {len(devices)}] visible "
+            "device(s)")
+    return Mesh(np.asarray(devices[:n_devices]), (axis,))
+
+
+def run_sharded_sweep(sweep_step: Callable, hparams, state, key, iters: int,
+                      state_specs, mesh: Optional[Mesh] = None,
+                      record: Optional[Callable] = None,
+                      record_every: int = 1, trace_dtype=None,
+                      axis: str = "workers",
+                      worker_traces: Sequence[str] = ("bits_per_node",)):
+    """Device-parallel :func:`run_sweep`: worker-axis state over a mesh.
+
+    ``sweep_step`` must be SHARD-AWARE — built by a
+    ``make_*_sharded_sweep_step`` factory (``repro.core.flecs`` /
+    ``repro.optim.baselines``).  Inside the mesh each device holds one
+    contiguous ``[n_local, ...]`` block of the worker-axis state leaves and
+    computes its workers' messages against GLOBAL worker ids and the GLOBAL
+    per-round key stream (``split(k, n)`` rows, gathered per block), then
+    reconstructs the full-federation aggregates with
+    ``lax.all_gather(tiled=True)`` and reduces integer-exact totals
+    (participation counts, ledger sums) with ``lax.psum``.  The gathered
+    arrays and the replicated server math are the same ops on the same
+    values as the dense engine, so the result is **bit-for-bit identical**
+    to :func:`run_sweep` on the same key stream — exact bit ledgers,
+    identical objective traces (tests/subproc/sharded_equiv.py pins this on
+    forced host devices; float psum would reassociate the sum, which is why
+    the engine gathers and re-reduces instead of psum-ing partial means).
+    One caveat bounds the contract: each device must hold at least TWO
+    workers.  XLA lowers a batch-1 vmapped oracle as an unbatched dot
+    whose reduction order can differ from the batched lowering by ~1 ulp,
+    so at ``n_local == 1`` the equality degrades from bitwise to
+    tight-tolerance (the server math itself stays exact either way).
+
+    state:       the FULL (unsharded) initial state — worker-axis leaves
+                 are laid over the mesh by jit from ``state_specs``.
+    state_specs: pytree matching ``state`` whose leaves are the mesh axis
+                 name (worker-sharded along dim 0) or ``""`` (replicated) —
+                 e.g. ``flecs.sharded_state_specs()``.
+    worker_traces: aux/trace keys carrying a trailing per-worker axis
+                 (sharded in the output); every other trace is replicated.
+    Returns (final_states, traces) exactly like :func:`run_sweep` — same
+    shapes, same leading [G] grid axis, fully gathered.
+    """
+    if mesh is None:
+        mesh = worker_mesh(axis=axis)
+    n_dev = mesh.shape[axis]
+    G = jax.tree.leaves(hparams)[0].shape[0]
+
+    def _local(leaf, s):
+        if s == axis:
+            if leaf.ndim == 0 or leaf.shape[0] % n_dev:
+                raise ValueError(
+                    f"worker-sharded state leaf of shape {leaf.shape} does "
+                    f"not divide over {n_dev} device(s) on mesh axis "
+                    f"{axis!r}")
+            return jax.ShapeDtypeStruct(
+                (leaf.shape[0] // n_dev,) + leaf.shape[1:], leaf.dtype)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype)
+
+    local_state = jax.tree.map(_local, state, state_specs)
+    keys = sweep_keys(key, G, iters)
+    fn = sweep_program(sweep_step, iters, record=record,
+                       record_every=record_every, trace_dtype=trace_dtype)
+    # Discover the trace structure at LOCAL shapes with the mesh axis
+    # bound, to spec the outputs: per-worker traces ([G, T, n_local] on
+    # device) shard on the worker axis, everything else is replicated.
+    _, out_shape = jax.make_jaxpr(
+        fn, axis_env=[(axis, n_dev)], return_shape=True)(
+            hparams, local_state, keys)
+    _, trace_shapes = out_shape
+
+    def _trace_spec(path, _leaf):
+        name = getattr(path[-1], "key", None) if path else None
+        return (PartitionSpec(None, None, axis) if name in worker_traces
+                else PartitionSpec())
+
+    trace_specs = jax.tree_util.tree_map_with_path(_trace_spec, trace_shapes)
+    in_state = jax.tree.map(
+        lambda s: PartitionSpec(axis) if s == axis else PartitionSpec(),
+        state_specs)
+    out_state = jax.tree.map(
+        lambda s: PartitionSpec(None, axis) if s == axis else PartitionSpec(),
+        state_specs)
+    prog = shard_map(fn, mesh,
+                     in_specs=(PartitionSpec(), in_state, PartitionSpec()),
+                     out_specs=(out_state, trace_specs))
+    return jax.jit(prog)(hparams, state, keys)
+
+
 def run_async_sweep(sweep_step: Callable, hparams, state, key, iters: int,
                     record: Optional[Callable] = None,
                     record_every: int = 1, trace_dtype=None):
@@ -632,6 +811,9 @@ def freeze_on_bit_budget(sweep_step: Callable) -> Callable:
             aux = dict(aux)
             if "bits_per_node" in aux:
                 aux["bits_per_node"] = frozen.bits_per_node
+            if "edge_bits" in aux and getattr(frozen, "edge_bits",
+                                              None) is not None:
+                aux["edge_bits"] = frozen.edge_bits
             if "buffered" in aux and hasattr(frozen, "acc_n"):
                 aux["buffered"] = frozen.acc_n
             for k in _FROZEN_ZERO_KEYS:
@@ -666,6 +848,12 @@ def iters_for_bit_budget(budget, bits_per_round) -> int:
     price = np.asarray(bits_per_round, dtype=float)
     if budget.size == 0 or price.size == 0:
         raise ValueError("empty bit-budget/price grid")
-    if np.any(price <= 0):
-        raise ValueError(f"bits_per_round must be > 0, got {price}")
+    if not np.all(np.isfinite(budget)):
+        raise ValueError(
+            f"bit budgets must be finite, got {budget}: an inf/nan budget "
+            "has no derivable scan length — pin run.iters explicitly for "
+            "unbounded runs instead")
+    if np.any(price <= 0) or not np.all(np.isfinite(price)):
+        raise ValueError(
+            f"bits_per_round must be finite and > 0, got {price}")
     return max(1, int(np.ceil(np.max(budget / price))))

@@ -79,12 +79,17 @@ from repro.core.compressors import (CompressorSpec, compress, dither_spec,
 from repro.core.directions import (fedsonia_direction,
                                    truncated_inverse_direction,
                                    truncated_inverse_direction_floored)
-from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
-                               applied_staleness, bits_dtype, buffer_busy,
-                               buffer_receive, buffer_send, damped_alpha,
+from repro.core.driver import (ASYNC_SALT, COHORT_SALT, MessageBuffer,
+                               StalenessSchedule, applied_staleness,
+                               bits_dtype, buffer_busy, buffer_receive,
+                               buffer_send, cohort_indices, damped_alpha,
                                fedbuff_accumulate, init_buffer, masked_mean,
                                resolve_participation, sample_delays,
                                validate_ps)
+from repro.core.hierarchy import (EDGE_SALT, HierarchyConfig, charge_edges,
+                                  edge_combine, edge_combine_cohort,
+                                  edge_round_bits, init_edge_bits,
+                                  validate_hierarchy)
 from repro.core.sketch import sketch
 from repro.core.updates import direct_update, truncated_lsr1_update
 
@@ -110,6 +115,13 @@ class FlecsConfig:
     use_kernel: bool = False          # fused Pallas compressor path
                                       # (repro.kernels.compressor;
                                       # interpret-mode off-TPU, bit-identical)
+    hierarchy: Optional[HierarchyConfig] = None
+                                      # two-tier server tree: edge
+                                      # aggregators re-compress per-edge
+                                      # partial sums before the top-level
+                                      # combine, billed on the separate
+                                      # edge_bits backhaul ledger
+                                      # (repro.core.hierarchy)
 
     @property
     def rho_val(self):
@@ -137,6 +149,11 @@ class FlecsHParams(NamedTuple):
                   reaches it, so budget-fair comparisons are ONE fixed-
                   length program (``api.ExperimentPlan.bit_budget`` crosses
                   this axis with a grid).
+      edge_spec — edge-tier CompressorSpec for hierarchical aggregation
+                  (``FlecsConfig.hierarchy``), the traced backhaul-
+                  compression axis; None whenever the config has no
+                  hierarchy (an empty pytree leaf, so flat grids are
+                  untouched).
     """
     alpha: jnp.ndarray
     gamma: jnp.ndarray
@@ -145,6 +162,7 @@ class FlecsHParams(NamedTuple):
     hess_spec: CompressorSpec
     p: Optional[jnp.ndarray] = None
     bit_budget: Optional[jnp.ndarray] = None
+    edge_spec: Optional[CompressorSpec] = None
 
     @property
     def grad_s(self):
@@ -162,11 +180,15 @@ def hparams_from_config(cfg: FlecsConfig) -> FlecsHParams:
     return FlecsHParams(jnp.float32(cfg.alpha), jnp.float32(cfg.gamma),
                         jnp.float32(cfg.beta),
                         spec_from_name(cfg.grad_compressor),
-                        spec_from_name(cfg.hess_compressor))
+                        spec_from_name(cfg.hess_compressor),
+                        edge_spec=(None if cfg.hierarchy is None else
+                                   spec_from_name(
+                                       cfg.hierarchy.edge_compressor)))
 
 
 def hparam_grid(alphas, gammas, grad_levels, betas=(1.0,),
-                hess_levels=(64.0,), ps=None) -> FlecsHParams:
+                hess_levels=(64.0,), ps=None,
+                edge_levels=None) -> FlecsHParams:
     """Cartesian product of the sweep axes, flattened to [G] leaves.
 
     ``grad_levels``/``hess_levels`` build dithering specs (the paper's
@@ -174,7 +196,10 @@ def hparam_grid(alphas, gammas, grad_levels, betas=(1.0,),
     families along an axis — can be built directly as a ``FlecsHParams``
     of stacked ``CompressorSpec`` leaves (``compressors.stack_specs``).
     ``ps`` (optional) adds a traced Bernoulli participation axis; ``None``
-    keeps participation on the static config path.
+    keeps participation on the static config path.  ``edge_levels``
+    (optional) adds a traced edge-tier dithering axis — the backhaul
+    compression of hierarchical aggregation; it requires a config with
+    ``hierarchy`` set and ``None`` leaves flat grids untouched.
     """
     validate_ps(ps)
     a, g, s, b, hs, p = jnp.meshgrid(
@@ -185,9 +210,18 @@ def hparam_grid(alphas, gammas, grad_levels, betas=(1.0,),
         jnp.asarray(hess_levels, jnp.float32),
         jnp.asarray([1.0] if ps is None else ps, jnp.float32),
         indexing="ij")
-    return FlecsHParams(a.ravel(), g.ravel(), b.ravel(),
-                        dither_spec(s.ravel()), dither_spec(hs.ravel()),
-                        None if ps is None else p.ravel())
+    hp = FlecsHParams(a.ravel(), g.ravel(), b.ravel(),
+                      dither_spec(s.ravel()), dither_spec(hs.ravel()),
+                      None if ps is None else p.ravel())
+    if edge_levels is None:
+        return hp
+    # cross the base grid with the edge axis: repeat every base point E
+    # times, tile the edge levels across them (base-major order)
+    E = len(edge_levels)
+    hp = jax.tree.map(lambda leaf: jnp.repeat(leaf, E, axis=0), hp)
+    tiled = jnp.tile(jnp.asarray(edge_levels, jnp.float32),
+                     a.size)
+    return hp._replace(edge_spec=dither_spec(tiled))
 
 
 class FlecsState(NamedTuple):
@@ -196,9 +230,17 @@ class FlecsState(NamedTuple):
     B: jnp.ndarray        # [n, d, d] per-worker Hessian approximations
     k: jnp.ndarray        # iteration counter
     bits_per_node: jnp.ndarray   # [n] cumulative communicated bits per worker
+    edge_bits: Optional[jnp.ndarray] = None
+                          # [n_edges] cumulative backhaul bits per edge
+                          # aggregator (hierarchical aggregation only;
+                          # None — an empty pytree leaf — for flat configs,
+                          # so pre-hierarchy states are untouched)
 
 
-def init_state(w0: jnp.ndarray, n_workers: int) -> FlecsState:
+def init_state(w0: jnp.ndarray, n_workers: int,
+               n_edges: Optional[int] = None) -> FlecsState:
+    """``n_edges`` allocates the hierarchical backhaul ledger — pass
+    ``cfg.hierarchy.n_edges`` iff the config aggregates hierarchically."""
     d = w0.shape[0]
     return FlecsState(
         w=w0.astype(jnp.float32),
@@ -206,6 +248,7 @@ def init_state(w0: jnp.ndarray, n_workers: int) -> FlecsState:
         B=jnp.zeros((n_workers, d, d), jnp.float32),
         k=jnp.zeros((), jnp.int32),
         bits_per_node=jnp.zeros((n_workers,), bits_dtype()),
+        edge_bits=None if n_edges is None else init_edge_bits(n_edges),
     )
 
 
@@ -238,7 +281,9 @@ def hparams_round_bits(cfg: FlecsConfig, hp: FlecsHParams, d: int):
 def _worker_messages(local_grad: Callable, local_hvp: Callable,
                      grad_spec: CompressorSpec, hess_spec: CompressorSpec,
                      w, h, B, S, k_g, k_h, k_q, k_c,
-                     use_kernel: bool = False):
+                     use_kernel: bool = False, ids=None,
+                     n_total: Optional[int] = None,
+                     fold_keys: bool = False):
     """Worker compute phase of Algorithm 1, vmapped over the federation.
 
     Returns (c_all [n,d], M_all [n,m,m], C_all [n,d,m], BS_all [n,d,m]) at
@@ -247,6 +292,16 @@ def _worker_messages(local_grad: Callable, local_hvp: Callable,
     so the two consume identical key streams and are trace-equivalent at
     zero delay.  The compressor specs may be traced (sweep axes);
     ``use_kernel`` (static) selects the fused Pallas compressor path.
+
+    ids/n_total: the sharded and cohort engines compute a SUBSET of the
+    federation's rows (a device's contiguous block / a sampled cohort) —
+    they pass the rows' GLOBAL worker ids plus the registered population
+    size, and each row draws the exact per-worker keys the dense engine
+    would (``split(k, n_total)`` rows, gathered by id), so a block's
+    messages match the dense run bit-for-bit.  ``fold_keys=True`` (cohort
+    at population scale) derives compressor keys by ``fold_in(k, id)``
+    instead — O(rows) with no [n_total] key array, matching how the
+    gradient/HVP keys are already drawn (analysis rule R7).
     """
     n = h.shape[0]
 
@@ -259,9 +314,19 @@ def _worker_messages(local_grad: Callable, local_hvp: Callable,
         Cm = compress(hess_spec, kc, Y - BS, use_kernel)  # hess diff
         return c, M, Cm, BS
 
-    ks_q = jax.random.split(k_q, n)
-    ks_c = jax.random.split(k_c, n)
-    return jax.vmap(worker)(jnp.arange(n), h, B, ks_q, ks_c)
+    if ids is None:
+        ids = jnp.arange(n)
+        ks_q = jax.random.split(k_q, n)
+        ks_c = jax.random.split(k_c, n)
+    elif fold_keys:
+        ks_q = jax.vmap(lambda i: jax.random.fold_in(k_q, i))(ids)
+        ks_c = jax.vmap(lambda i: jax.random.fold_in(k_c, i))(ids)
+    else:
+        if n_total is None:
+            raise ValueError("explicit worker ids require n_total")
+        ks_q = jax.random.split(k_q, n_total)[ids]
+        ks_c = jax.random.split(k_c, n_total)[ids]
+    return jax.vmap(worker)(ids, h, B, ks_q, ks_c)
 
 
 def _direction(cfg: FlecsConfig, g_tilde, Y_tilde, M_bar, B_bar):
@@ -292,54 +357,130 @@ def _update_B(cfg: FlecsConfig, beta, B, Y_tilde_i, M_all, S_of_t, t):
                 B, Y_tilde_i, M_all, t)
 
 
+def _hierarchy_guards(cfg: FlecsConfig, hp, state, n: int) -> None:
+    """Trace-time contract checks for hierarchical aggregation (shared by
+    the dense/sharded and cohort rounds)."""
+    if hp.edge_spec is None:
+        raise ValueError(
+            "FlecsConfig.hierarchy requires hparams carrying an edge_spec "
+            "(hparams_from_config fills it from the config; grids pass "
+            "edge_levels=...)")
+    if state.edge_bits is None:
+        raise ValueError(
+            "FlecsConfig.hierarchy requires init_state(..., n_edges="
+            "cfg.hierarchy.n_edges) so the backhaul ledger exists")
+    validate_hierarchy(cfg.hierarchy, n)
+
+
 def _flecs_round(cfg: FlecsConfig, local_grad: Callable, local_hvp: Callable,
-                 hp: FlecsHParams, state: FlecsState, key):
+                 hp: FlecsHParams, state: FlecsState, key,
+                 axis: Optional[str] = None, n_total: Optional[int] = None):
     """One round of Algorithm 1 with client sampling.
 
     Every ``hp`` field may be traced (sweep path) or concrete (the static
     ``make_flecs_step`` specialization); structural choices (m, Hessian
-    update rule, direction, sampling kind) stay static from cfg.
+    update rule, direction, sampling kind, hierarchy shape) stay static
+    from cfg.
+
+    axis/n_total: under ``driver.run_sharded_sweep`` the state's worker
+    leaves are one device's contiguous ``[n_local, ...]`` block of the
+    ``n_total``-worker federation, with ``axis`` the mesh axis name.  The
+    block computes its workers' messages against global ids and the global
+    key stream, full-federation aggregates are reconstructed with
+    ``lax.all_gather(tiled=True)`` and integer-exact totals with
+    ``lax.psum``, and the server math runs replicated on the gathered
+    arrays — the same ops on the same values as the dense round, which is
+    the bit-for-bit equivalence contract.  ``axis=None`` is the dense
+    engine, op-for-op as before.
     """
-    n, d = state.h.shape
+    n_loc, d = state.h.shape
+    n = n_loc if axis is None else n_total
     m = cfg.m
     S = sketch(cfg.sketch_kind, d, m, state.k)          # shared via seed
 
     k_g, k_h, k_q, k_c, k_p = jax.random.split(key, 5)
+    # full-federation mask — replicated (identical draw) on every device
     mask = resolve_participation(k_p, n, cfg.participation, cfg.sampling,
                                  hp.p)                                  # [n]
+    if axis is None:
+        ids, mask_loc = None, mask
+    else:
+        idx = jax.lax.axis_index(axis)
+        ids = idx * n_loc + jnp.arange(n_loc)
+        mask_loc = jax.lax.dynamic_slice_in_dim(mask, idx * n_loc, n_loc)
 
     c_all, M_all, C_all, BS_all = _worker_messages(
         local_grad, local_hvp, hp.grad_spec, hp.hess_spec,
         state.w, state.h, state.B, S, k_g, k_h, k_q, k_c,
-        cfg.use_kernel)
+        cfg.use_kernel, ids=ids, n_total=n)
 
-    # --- server -----------------------------------------------------------
-    g_tilde_i = c_all + state.h                          # [n, d]
-    Y_tilde_i = C_all + BS_all                           # [n, d, m]
+    # --- per-worker server state (local rows under sharding) --------------
+    g_tilde_i = c_all + state.h                          # [n_loc, d]
+    Y_tilde_i = C_all + BS_all                           # [n_loc, d, m]
 
     B_upd = _update_B(cfg, hp.beta, state.B, Y_tilde_i, M_all,
-                      lambda ti: S, jnp.zeros((n,), jnp.float32))
+                      lambda ti: S, jnp.zeros((n_loc,), jnp.float32))
     # only sampled workers communicated a Hessian difference this round
-    B_new = jnp.where(mask[:, None, None] > 0, B_upd, state.B)
+    B_new = jnp.where(mask_loc[:, None, None] > 0, B_upd, state.B)
 
-    g_tilde = masked_mean(g_tilde_i, mask)
-    Y_tilde = masked_mean(Y_tilde_i, mask)
-    M_bar = masked_mean(M_all, mask)
-    B_bar = masked_mean(B_new, mask)
+    # --- full-federation aggregates (replicated under sharding) -----------
+    if axis is None:
+        g_i, Y_i, M_i = g_tilde_i, Y_tilde_i, M_all
+        n_active = jnp.sum(mask)
+    else:
+        gather = lambda x: jax.lax.all_gather(x, axis, tiled=True)  # noqa: E731
+        g_i, Y_i, M_i = gather(g_tilde_i), gather(Y_tilde_i), gather(M_all)
+        # psum of per-device {0,1} counts: integer-exact, == jnp.sum(mask)
+        n_active = jax.lax.psum(jnp.sum(mask_loc), axis)
+
+    if cfg.hierarchy is not None:
+        _hierarchy_guards(cfg, hp, state, n)
+        E = cfg.hierarchy.n_edges
+        k_e = jax.random.fold_in(key, EDGE_SALT)
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        g_sum, edge_active = edge_combine(
+            hp.edge_spec, jax.random.fold_in(k_e, 0), g_i, mask, E,
+            cfg.use_kernel)
+        Y_sum, _ = edge_combine(hp.edge_spec, jax.random.fold_in(k_e, 1),
+                                Y_i, mask, E, cfg.use_kernel)
+        M_sum, _ = edge_combine(hp.edge_spec, jax.random.fold_in(k_e, 2),
+                                M_i, mask, E, cfg.use_kernel)
+        g_tilde, Y_tilde, M_bar = g_sum / denom, Y_sum / denom, M_sum / denom
+        edge_bits_new = charge_edges(
+            state.edge_bits, edge_active,
+            edge_round_bits(hp.edge_spec, d, m, cfg.use_kernel))
+    else:
+        g_tilde = masked_mean(g_i, mask)
+        Y_tilde = masked_mean(Y_i, mask)
+        M_bar = masked_mean(M_i, mask)
+        edge_bits_new = state.edge_bits
+
+    # B̄ is server-side curvature state, not wire traffic — it stays a flat
+    # mean under hierarchy, and the sharded engine only pays the [n, d, d]
+    # gather when the direction actually consumes it
+    if cfg.direction == "truncated_inverse" or axis is None:
+        B_full = B_new if axis is None else jax.lax.all_gather(
+            B_new, axis, tiled=True)
+        B_bar = masked_mean(B_full, mask)
+    else:
+        B_bar = jnp.zeros((d, d), jnp.float32)
 
     p = _direction(cfg, g_tilde, Y_tilde, M_bar, B_bar)
     w_new = state.w + hp.alpha * p
-    h_new = state.h + hp.gamma * mask[:, None] * c_all
+    h_new = state.h + hp.gamma * mask_loc[:, None] * c_all
 
     round_bits = _round_bits(hp.grad_spec, hp.hess_spec, d, m,
                              cfg.use_kernel)
     bits_new = (state.bits_per_node
-                + mask.astype(state.bits_per_node.dtype) * round_bits)
-    new_state = FlecsState(w_new, h_new, B_new, state.k + 1, bits_new)
+                + mask_loc.astype(state.bits_per_node.dtype) * round_bits)
+    new_state = FlecsState(w_new, h_new, B_new, state.k + 1, bits_new,
+                           edge_bits_new)
     aux = {"g_tilde_norm": jnp.linalg.norm(g_tilde),
            "dir_norm": jnp.linalg.norm(p),
-           "n_active": jnp.sum(mask),
+           "n_active": n_active,
            "bits_per_node": new_state.bits_per_node}
+    if edge_bits_new is not None:
+        aux["edge_bits"] = edge_bits_new
     return new_state, aux
 
 
@@ -366,6 +507,191 @@ def make_flecs_step(cfg: FlecsConfig,
 
     def step(state: FlecsState, key) -> tuple:
         return sweep(hp, state, key)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine (device-mesh data parallelism over the worker axis)
+# ---------------------------------------------------------------------------
+
+def make_flecs_sharded_sweep_step(cfg: FlecsConfig, local_grad: Callable,
+                                  local_hvp: Callable, n_total: int,
+                                  axis: str = "workers"):
+    """The sweep step for ``driver.run_sharded_sweep``: identical signature
+    to ``make_flecs_sweep_step``'s, but the state's worker leaves are one
+    device's contiguous block of the ``n_total``-worker federation and the
+    round runs under a ``shard_map`` axis.  Bit-for-bit equal to the dense
+    sweep step on the same key stream (see ``_flecs_round``)."""
+    def step(hp: FlecsHParams, state: FlecsState, key) -> tuple:
+        return _flecs_round(cfg, local_grad, local_hvp, hp, state, key,
+                            axis=axis, n_total=n_total)
+
+    return step
+
+
+def sharded_state_specs(hierarchy: bool = False,
+                        axis: str = "workers") -> FlecsState:
+    """``driver.run_sharded_sweep`` state-spec tree for ``FlecsState``:
+    per-worker leaves (h, B, bits_per_node) shard along the mesh axis, the
+    iterate/counter (and the [n_edges] backhaul ledger, whose edges span
+    devices) stay replicated."""
+    return FlecsState(w="", h=axis, B=axis, k="", bits_per_node=axis,
+                      edge_bits="" if hierarchy else None)
+
+
+# ---------------------------------------------------------------------------
+# Cohort engine (population-scale client subsampling)
+# ---------------------------------------------------------------------------
+
+class FlecsCohortState(NamedTuple):
+    """Population-scale server state: O(N·d) persistent per-client arrays,
+    O(d²) shared curvature — NEVER O(N·d²).
+
+    The registered population N only appears in the per-client shift table
+    ``h`` and the uplink ledger ``bits_per_node``; each round gathers the
+    sampled cohort's rows, computes on [K, ...] arrays, and scatter-adds
+    the updates back (distinct indices by construction, so the scatter is
+    deterministic).  The Hessian approximation ``B`` is SHARED across
+    clients (the population variant of Algorithm 1): per-client B is
+    O(N·d²) — 4.6 TB at N=100k, d=24 — and the directions only ever
+    consume aggregate curvature, so the cohort engine maintains the
+    aggregate directly.
+    """
+    w: jnp.ndarray        # [d]
+    h: jnp.ndarray        # [N, d]   per-client gradient shifts
+    B: jnp.ndarray        # [d, d]   SHARED Hessian approximation
+    k: jnp.ndarray        # iteration counter
+    bits_per_node: jnp.ndarray   # [N] cumulative uplink bits per client
+    edge_bits: Optional[jnp.ndarray] = None   # [n_edges] backhaul ledger
+
+
+def init_cohort_state(w0: jnp.ndarray, n_total: int,
+                      n_edges: Optional[int] = None) -> FlecsCohortState:
+    d = w0.shape[0]
+    return FlecsCohortState(
+        w=w0.astype(jnp.float32),
+        h=jnp.zeros((n_total, d), jnp.float32),
+        B=jnp.zeros((d, d), jnp.float32),
+        k=jnp.zeros((), jnp.int32),
+        bits_per_node=jnp.zeros((n_total,), bits_dtype()),
+        edge_bits=None if n_edges is None else init_edge_bits(n_edges),
+    )
+
+
+def make_flecs_cohort_sweep_step(cfg: FlecsConfig, local_grad: Callable,
+                                 local_hvp: Callable, n_total: int,
+                                 cohort: int):
+    """Build the cohort-subsampled sweep step: each round draws a size-K
+    cohort from the N-client population (``driver.cohort_indices`` —
+    stratified, distinct ids), samples participation WITHIN the cohort,
+    and materializes only [K, ...] per-round arrays, so per-round compute
+    and memory are independent of N (analysis rule R7; the scaling claim
+    ``benchmarks/scaling_bench.py`` gates).
+
+    Key-stream notes: the round key splits exactly like the dense round;
+    cohort selection folds ``COHORT_SALT`` into the participation key, and
+    compressor keys are derived by ``fold_in(k, client_id)``
+    (``_worker_messages(fold_keys=True)``) so no [N] key array ever
+    exists.  At ``cohort == n_total`` the selection is the identity and
+    the participation draw matches the dense engine bit-for-bit
+    (tests/test_cohort.py pins this for an identity-compressor config,
+    where the compressor key stream is unused).
+
+    Restrictions (population variant): ``hessian_update="direct"`` only —
+    the L-SR1 path replays per-message sketches against per-client state
+    the shared-B variant does not keep.
+    """
+    if cfg.hessian_update != "direct":
+        raise ValueError(
+            "the cohort engine maintains a SHARED Hessian approximation "
+            "and supports hessian_update='direct' only (L-SR1 needs "
+            f"per-client state), got {cfg.hessian_update!r}")
+    if not 1 <= cohort <= n_total:
+        raise ValueError(f"cohort={cohort} must be in [1, {n_total}]")
+    if n_total % cohort:
+        raise ValueError(
+            f"cohort={cohort} must divide the population {n_total} "
+            "(stratified selection draws one client per contiguous "
+            "stratum)")
+
+    def step(hp: FlecsHParams, state: FlecsCohortState, key) -> tuple:
+        d = state.w.shape[0]
+        m = cfg.m
+        S = sketch(cfg.sketch_kind, d, m, state.k)
+        k_g, k_h, k_q, k_c, k_p = jax.random.split(key, 5)   # == dense split
+
+        k_sel = jax.random.fold_in(k_p, COHORT_SALT)
+        idx = cohort_indices(k_sel, n_total, cohort)          # [K] distinct
+        # participation over the COHORT axis only — same key as the dense
+        # draw, so cohort == n_total reproduces it bit-for-bit
+        mask = resolve_participation(k_p, n_total, cfg.participation,
+                                     cfg.sampling, hp.p, cohort=cohort)
+
+        h_c = state.h[idx]                                    # [K, d]
+        B_rows = jnp.broadcast_to(state.B, (cohort, d, d))
+        c_c, M_c, C_c, BS_c = _worker_messages(
+            local_grad, local_hvp, hp.grad_spec, hp.hess_spec,
+            state.w, h_c, B_rows, S, k_g, k_h, k_q, k_c,
+            cfg.use_kernel, ids=idx, n_total=n_total, fold_keys=True)
+
+        g_tilde_i = c_c + h_c                                 # [K, d]
+        Y_tilde_i = C_c + BS_c                                # [K, d, m]
+
+        B_upd = _update_B(cfg, hp.beta, B_rows, Y_tilde_i, M_c,
+                          lambda ti: S, jnp.zeros((cohort,), jnp.float32))
+        # shared curvature: average the active cohort members' updated
+        # approximations; an all-idle round leaves B untouched
+        any_active = jnp.sum(mask) > 0
+        B_new = jnp.where(any_active, masked_mean(B_upd, mask), state.B)
+
+        if cfg.hierarchy is not None:
+            _hierarchy_guards(cfg, hp, state, n_total)
+            E = cfg.hierarchy.n_edges
+            k_e = jax.random.fold_in(key, EDGE_SALT)
+            denom = jnp.maximum(jnp.sum(mask), 1.0)
+            g_sum, edge_active = edge_combine_cohort(
+                hp.edge_spec, jax.random.fold_in(k_e, 0), g_tilde_i, mask,
+                idx, n_total, E, cfg.use_kernel)
+            Y_sum, _ = edge_combine_cohort(
+                hp.edge_spec, jax.random.fold_in(k_e, 1), Y_tilde_i, mask,
+                idx, n_total, E, cfg.use_kernel)
+            M_sum, _ = edge_combine_cohort(
+                hp.edge_spec, jax.random.fold_in(k_e, 2), M_c, mask,
+                idx, n_total, E, cfg.use_kernel)
+            g_tilde, Y_tilde, M_bar = (g_sum / denom, Y_sum / denom,
+                                       M_sum / denom)
+            edge_bits_new = charge_edges(
+                state.edge_bits, edge_active,
+                edge_round_bits(hp.edge_spec, d, m, cfg.use_kernel))
+        else:
+            g_tilde = masked_mean(g_tilde_i, mask)
+            Y_tilde = masked_mean(Y_tilde_i, mask)
+            M_bar = masked_mean(M_c, mask)
+            edge_bits_new = state.edge_bits
+
+        p = _direction(cfg, g_tilde, Y_tilde, M_bar, B_new)
+        w_new = state.w + hp.alpha * p
+
+        # scatter the cohort's updates back into the persistent per-client
+        # arrays — idx rows are distinct by construction, so .at[].add is
+        # deterministic
+        h_new = state.h.at[idx].add(hp.gamma * mask[:, None] * c_c)
+        round_bits = _round_bits(hp.grad_spec, hp.hess_spec, d, m,
+                                 cfg.use_kernel)
+        bits_new = state.bits_per_node.at[idx].add(
+            mask.astype(state.bits_per_node.dtype) * round_bits)
+
+        new_state = FlecsCohortState(w_new, h_new, B_new, state.k + 1,
+                                     bits_new, edge_bits_new)
+        aux = {"g_tilde_norm": jnp.linalg.norm(g_tilde),
+               "dir_norm": jnp.linalg.norm(p),
+               "n_active": jnp.sum(mask),
+               "cohort_bits": jnp.sum(
+                   mask.astype(state.bits_per_node.dtype) * round_bits)}
+        if edge_bits_new is not None:
+            aux["edge_bits"] = edge_bits_new
+        return new_state, aux
 
     return step
 

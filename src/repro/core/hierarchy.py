@@ -1,0 +1,176 @@
+"""Two-tier hierarchical aggregation: edge aggregators under one server.
+
+Population-scale federations do not ship every client message to one
+server: clients report to an **edge aggregator** (a cell tower, a regional
+PoP), edges combine their clients' messages locally, and only the combined
+per-edge message crosses the backhaul to the top-level server.  This
+module is that server tree for the scan engine:
+
+* clients are assigned to ``n_edges`` aggregators (contiguous id blocks —
+  :func:`edge_of`, matching the device-mesh layout of
+  ``driver.run_sharded_sweep`` so an edge never straddles devices);
+* each round, every edge forms the masked partial sum of its active
+  clients' (already worker-compressed) messages, re-compresses the partial
+  with the **edge-tier** :class:`~repro.core.compressors.CompressorSpec`,
+  and ships one message upstream;
+* the top level sums the per-edge messages and normalizes by the global
+  active count — with an ``identity`` edge spec this is the flat
+  ``driver.masked_mean`` algebra (same terms, same denominator), so the
+  hierarchy collapses to the dense server when the backhaul is
+  uncompressed.  Equality is algebraic, not bitwise: the two-stage sum
+  reassociates the f32 reduction, so tests compare at tight tolerance
+  (unlike the sharded engine's all_gather contract, which replays the
+  SAME reduction and is exact).
+
+Billing is two-tier: the existing per-client ``bits_per_node`` ledger
+keeps charging the **uplink** (client -> edge, priced by the worker
+compressor), while the [n_edges] ``edge_bits`` ledger (``bits_dtype()``,
+like every ledger) charges the **backhaul** (edge -> server, priced by the
+edge spec via :func:`edge_round_bits`).  An edge with zero active clients
+ships nothing and is charged nothing that round.
+
+When does the two-tier combine equal the flat one?  Exactly when the edge
+compressor commutes with summation (``compressors.spec_commutes_with_sum``):
+identity trivially, and linear sketches (count-sketch, the planned FetchSGD
+family) by linearity.  Dithering is unbiased but NOT linear (rounding), and
+top-k is neither — re-compressing partial sums changes the estimator, which
+is the omega/bits trade-off the edge-spec sweep axis explores.  Note this
+is also why the sharded engine (``run_sharded_sweep``) reduces float
+aggregates by all_gather + replicated math rather than ``lax.psum``: psum
+reassociates the sum, and only integer-exact reductions survive that
+bit-for-bit.
+
+The edge spec is a TRACED axis: ``flecs.hparam_grid(edge_levels=...)``
+puts it on the sweep grid, so a backhaul-compression ablation runs as one
+compiled program under the one-compile-per-figure invariant
+(``api.run_plan``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressors import CompressorSpec, compress, spec_bits
+from repro.core.driver import bits_dtype
+
+# Domain separator for the edge-tier compressor key stream: folded into the
+# round key so backhaul randomness never aliases the worker-tier draws
+# (mirrors driver.ASYNC_SALT / driver.COHORT_SALT).
+EDGE_SALT = 0xED6E
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyConfig:
+    """Static shape of the server tree (the traced knob — the edge-tier
+    CompressorSpec — lives on the hparams, not here).
+
+    n_edges:         number of edge aggregators; must divide the worker
+                     count (contiguous-block assignment).
+    edge_compressor: default edge-tier compressor name, used by
+                     ``hparams_from_config`` when no ``edge_levels`` sweep
+                     axis overrides it.  "identity" bills the backhaul at
+                     full float width and reproduces the flat server
+                     algebra exactly.
+    """
+    n_edges: int
+    edge_compressor: str = "identity"
+
+    def __post_init__(self):
+        if self.n_edges < 1:
+            raise ValueError(f"n_edges must be >= 1, got {self.n_edges}")
+
+
+def validate_hierarchy(hier: HierarchyConfig, n_workers: int) -> None:
+    """Contiguous-block assignment needs n_edges | n_workers."""
+    if n_workers % hier.n_edges:
+        raise ValueError(
+            f"n_edges={hier.n_edges} must divide the worker count "
+            f"{n_workers} (clients are assigned to edges in contiguous "
+            f"id blocks)")
+
+
+def edge_of(ids: jnp.ndarray, n_total: int, n_edges: int) -> jnp.ndarray:
+    """Client id -> edge id (contiguous blocks of n_total // n_edges)."""
+    return (ids // (n_total // n_edges)).astype(jnp.int32)
+
+
+def init_edge_bits(n_edges: int) -> jnp.ndarray:
+    """[n_edges] backhaul ledger, in the shared ledger dtype."""
+    return jnp.zeros((n_edges,), bits_dtype())
+
+
+def edge_round_bits(edge_spec: CompressorSpec, d: int, m: int,
+                    use_kernel: bool = False):
+    """Backhaul bits ONE active edge ships in one FLECS round (traced).
+
+    The edge message mirrors the worker payload shapes: the combined
+    gradient sum [d], sketched-Hessian sum [d, m], and curvature sum
+    [m, m], each re-compressed with the edge spec (dimension-aware, like
+    the uplink price in ``flecs._round_bits``).
+    """
+    return (spec_bits(edge_spec, d, use_kernel)
+            + spec_bits(edge_spec, d * m, use_kernel)
+            + spec_bits(edge_spec, m * m, use_kernel))
+
+
+def charge_edges(edge_bits: jnp.ndarray, edge_active: jnp.ndarray, price):
+    """Accumulate the backhaul ledger: an edge pays ``price`` iff at least
+    one of its clients participated this round (idle edges ship nothing)."""
+    return edge_bits + (edge_active > 0).astype(edge_bits.dtype) * price
+
+
+def _combine_compressed(edge_spec: CompressorSpec, key, partial,
+                        edge_active, use_kernel: bool = False):
+    """Shared top tier: re-compress per-edge partial sums [E, ...], zero
+    idle edges (nothing was transmitted), and sum into the server total."""
+    n_edges = partial.shape[0]
+    ks = jax.random.split(key, n_edges)
+    q = jax.vmap(lambda k, v: compress(edge_spec, k, v, use_kernel))(
+        ks, partial)
+    gate = (edge_active > 0).reshape((-1,) + (1,) * (partial.ndim - 1))
+    return jnp.sum(jnp.where(gate, q, jnp.zeros_like(q)), axis=0)
+
+
+def edge_combine(edge_spec: CompressorSpec, key, x: jnp.ndarray,
+                 mask: jnp.ndarray, n_edges: int,
+                 use_kernel: bool = False):
+    """Two-tier masked SUM over the full worker axis.
+
+    x [n, ...], mask [n] -> (combined sum [...], edge_active [E]): each
+    contiguous block of n // n_edges clients masked-sums locally, the
+    partial is edge-compressed, idle edges contribute exact zeros, and the
+    top level sums the edges.  Dividing by ``max(sum(mask), 1)`` (the
+    caller's job, shared across tensors) gives the hierarchical mean; with
+    an identity edge spec that equals ``driver.masked_mean``.
+    """
+    n = x.shape[0]
+    blk = n // n_edges
+    lead = (-1,) + (1,) * (x.ndim - 1)
+    xm = (mask.reshape(lead) * x).reshape((n_edges, blk) + x.shape[1:])
+    partial = jnp.sum(xm, axis=1)                              # [E, ...]
+    edge_active = jnp.sum(mask.reshape(n_edges, blk), axis=1)  # [E]
+    return (_combine_compressed(edge_spec, key, partial, edge_active,
+                                use_kernel), edge_active)
+
+
+def edge_combine_cohort(edge_spec: CompressorSpec, key, x: jnp.ndarray,
+                        mask: jnp.ndarray, ids: jnp.ndarray, n_total: int,
+                        n_edges: int, use_kernel: bool = False):
+    """Two-tier masked SUM over a sampled cohort — O(cohort) + O(E).
+
+    x [K, ...] are the cohort rows, ``ids`` [K] their population client
+    ids: each row scatter-adds into its edge's partial via segment_sum
+    (edges partition the REGISTERED population, so a cohort round only
+    touches the edges its members report to).  Same compression/zeroing
+    tier as :func:`edge_combine`; no [n_total] intermediate is ever
+    materialized (analysis rule R7).
+    """
+    eids = edge_of(ids, n_total, n_edges)
+    lead = (-1,) + (1,) * (x.ndim - 1)
+    partial = jax.ops.segment_sum(mask.reshape(lead) * x, eids,
+                                  num_segments=n_edges)
+    edge_active = jax.ops.segment_sum(mask, eids, num_segments=n_edges)
+    return (_combine_compressed(edge_spec, key, partial, edge_active,
+                                use_kernel), edge_active)

@@ -53,6 +53,15 @@ charged at the *arrival* round, and an aggregate step is applied once
 ``buffer_k=n`` under full participation) they collapse to the synchronous
 steps trace-for-trace, so delay ablations compare methods on one engine.
 
+Population scale: DIANA and GD additionally ship sharded
+(``make_*_sharded_sweep_step`` + ``*_sharded_state_specs`` for
+``driver.run_sharded_sweep``) and cohort-subsampled
+(``make_*_cohort_sweep_step``) engines, mirroring the FLECS contracts in
+``repro.core.flecs``.  FedNL is deliberately excluded from both: its
+per-worker d×d Hessian estimates make state AND payload O(n·d²) — the
+very bottleneck the population engines exist to avoid — so scaling it to
+a 100k-client registry has no faithful reading.
+
 Spec-based compression: every ``compressor`` argument accepts a registry
 name, a ``Compressor``, or a (possibly traced) ``CompressorSpec`` — the
 steps apply ``compressors.compress(spec, …)`` and charge
@@ -71,9 +80,10 @@ import jax.numpy as jnp
 
 from repro.core.compressors import (CompressorSpec, as_spec, compress,
                                     spec_bits, spec_bits_many)
-from repro.core.driver import (ASYNC_SALT, MessageBuffer, StalenessSchedule,
-                               applied_staleness, bits_dtype, buffer_busy,
-                               buffer_receive, buffer_send,
+from repro.core.driver import (ASYNC_SALT, COHORT_SALT, MessageBuffer,
+                               StalenessSchedule, applied_staleness,
+                               bits_dtype, buffer_busy, buffer_receive,
+                               buffer_send, cohort_indices,
                                fedbuff_accumulate, init_buffer, masked_mean,
                                resolve_participation, sample_delays,
                                validate_ps)
@@ -147,33 +157,127 @@ class DianaState(NamedTuple):
     bits_per_node: jnp.ndarray   # [n]
 
 
+def _diana_round(cfg: DianaConfig, local_grad: Callable, hp: DianaHParams,
+                 state: DianaState, key, axis: Optional[str] = None,
+                 n_total: Optional[int] = None):
+    """One DIANA round — dense (``axis=None``, op-for-op the original) or
+    sharded, mirroring ``flecs._flecs_round``'s contract: under
+    ``driver.run_sharded_sweep`` the state's worker leaves are one device's
+    contiguous block, workers compute against global ids and the global
+    per-worker key stream, the full shifted-gradient array is rebuilt with
+    ``all_gather(tiled=True)``, and the server mean runs replicated —
+    bit-for-bit the dense round on the same keys."""
+    n_loc, d = state.h.shape
+    n = n_loc if axis is None else n_total
+    k_g, k_q, k_p = jax.random.split(key, 3)
+    mask = resolve_participation(k_p, n, cfg.participation,
+                                 cfg.sampling, hp.p)                    # [n]
+
+    def worker(i, hk, kq):
+        g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
+        return compress(hp.spec, kq, g - hk, cfg.use_kernel)
+
+    if axis is None:
+        ids, mask_loc = jnp.arange(n), mask
+        ks = jax.random.split(k_q, n)
+    else:
+        idx = jax.lax.axis_index(axis)
+        ids = idx * n_loc + jnp.arange(n_loc)
+        mask_loc = jax.lax.dynamic_slice_in_dim(mask, idx * n_loc, n_loc)
+        ks = jax.random.split(k_q, n)[ids]
+    c = jax.vmap(worker)(ids, state.h, ks)
+    g_i = c + state.h
+    if axis is None:
+        g_full, n_active = g_i, jnp.sum(mask)
+    else:
+        g_full = jax.lax.all_gather(g_i, axis, tiled=True)
+        n_active = jax.lax.psum(jnp.sum(mask_loc), axis)  # integer-exact
+    g_tilde = masked_mean(g_full, mask)
+    w = state.w - hp.alpha * g_tilde
+    h = state.h + hp.gamma * mask_loc[:, None] * c
+    bits = state.bits_per_node + mask_loc.astype(
+        state.bits_per_node.dtype) * spec_bits(hp.spec, d, cfg.use_kernel)
+    new = DianaState(w, h, state.k + 1, bits)
+    return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
+                 "n_active": n_active,
+                 "bits_per_node": new.bits_per_node}
+
+
 def make_diana_sweep_step(cfg: DianaConfig, local_grad: Callable):
     """Build step(hp: DianaHParams, state, key) -> (state, aux) whose step
     sizes, compressor spec, and participation p are traced — the single
     round implementation ``make_diana_step`` specializes."""
 
     def step(hp: DianaHParams, state: DianaState, key):
-        n, d = state.h.shape
-        k_g, k_q, k_p = jax.random.split(key, 3)
-        mask = resolve_participation(k_p, n, cfg.participation,
-                                     cfg.sampling, hp.p)
+        return _diana_round(cfg, local_grad, hp, state, key)
+
+    return step
+
+
+def make_diana_sharded_sweep_step(cfg: DianaConfig, local_grad: Callable,
+                                  n_total: int, axis: str = "workers"):
+    """The DIANA sweep step for ``driver.run_sharded_sweep`` — the state's
+    worker leaves hold one device's block of the ``n_total`` federation."""
+
+    def step(hp: DianaHParams, state: DianaState, key):
+        return _diana_round(cfg, local_grad, hp, state, key, axis=axis,
+                            n_total=n_total)
+
+    return step
+
+
+def diana_sharded_state_specs(axis: str = "workers") -> DianaState:
+    """``driver.run_sharded_sweep`` state-spec tree for ``DianaState``."""
+    return DianaState(w="", h=axis, k="", bits_per_node=axis)
+
+
+def make_diana_cohort_sweep_step(cfg: DianaConfig, local_grad: Callable,
+                                 n_total: int, cohort: int):
+    """Cohort-subsampled DIANA over an N-client population: per round only
+    the size-K cohort's rows of the persistent [N, d] shift table and [N]
+    uplink ledger are gathered, computed on, and scatter-updated — no
+    [N, ...] per-round intermediates (analysis rule R7).  Selection,
+    participation, and key-stream conventions match
+    ``flecs.make_flecs_cohort_sweep_step``; at ``cohort == n_total`` with
+    an identity compressor (per-worker compressor keys unused) the rounds
+    reproduce the dense engine bit-for-bit at a single grid point —
+    across a vmapped sweep grid the two programs' gather/scatter context
+    steers XLA's fusion (FMA) differently, so grids agree to 1 ulp while
+    the integer-exact ledgers and activity counts stay exact
+    (tests/test_cohort.py pins both)."""
+    if not 1 <= cohort <= n_total:
+        raise ValueError(f"cohort={cohort} must be in [1, {n_total}]")
+    if n_total % cohort:
+        raise ValueError(
+            f"cohort={cohort} must divide the population {n_total} "
+            "(stratified selection draws one client per contiguous "
+            "stratum)")
+
+    def step(hp: DianaHParams, state: DianaState, key):
+        d = state.w.shape[0]
+        k_g, k_q, k_p = jax.random.split(key, 3)             # == dense split
+        k_sel = jax.random.fold_in(k_p, COHORT_SALT)
+        idx = cohort_indices(k_sel, n_total, cohort)         # [K] distinct
+        mask = resolve_participation(k_p, n_total, cfg.participation,
+                                     cfg.sampling, hp.p, cohort=cohort)
 
         def worker(i, hk, kq):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
             return compress(hp.spec, kq, g - hk, cfg.use_kernel)
 
-        ks = jax.random.split(k_q, n)
-        c = jax.vmap(worker)(jnp.arange(n), state.h, ks)
-        g_tilde = masked_mean(c + state.h, mask)
+        h_c = state.h[idx]                                   # [K, d]
+        ks = jax.vmap(lambda i: jax.random.fold_in(k_q, i))(idx)
+        c = jax.vmap(worker)(idx, h_c, ks)
+        g_tilde = masked_mean(c + h_c, mask)
         w = state.w - hp.alpha * g_tilde
-        h = state.h + hp.gamma * mask[:, None] * c
-        bits = state.bits_per_node + mask.astype(
-            state.bits_per_node.dtype) * spec_bits(hp.spec, d,
-                                                   cfg.use_kernel)
+        h = state.h.at[idx].add(hp.gamma * mask[:, None] * c)
+        per_round = mask.astype(state.bits_per_node.dtype) * spec_bits(
+            hp.spec, d, cfg.use_kernel)
+        bits = state.bits_per_node.at[idx].add(per_round)
         new = DianaState(w, h, state.k + 1, bits)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
                      "n_active": jnp.sum(mask),
-                     "bits_per_node": new.bits_per_node}
+                     "cohort_bits": jnp.sum(per_round)}
 
     return step
 
@@ -481,6 +585,39 @@ def make_gd_sweep_step(cfg: GDConfig, local_grad: Callable, n_workers: int):
         return new, {"g_tilde_norm": jnp.linalg.norm(g),
                      "n_active": jnp.sum(mask),
                      "bits_per_node": new.bits_per_node}
+
+    return step
+
+
+def make_gd_cohort_sweep_step(cfg: GDConfig, local_grad: Callable,
+                              n_total: int, cohort: int):
+    """Cohort-subsampled uncompressed GD: only the size-K cohort evaluates
+    gradients each round; the persistent [N] uplink ledger is
+    scatter-updated.  Selection/participation conventions match the DIANA
+    and FLECS cohort engines."""
+    if not 1 <= cohort <= n_total:
+        raise ValueError(f"cohort={cohort} must be in [1, {n_total}]")
+    if n_total % cohort:
+        raise ValueError(
+            f"cohort={cohort} must divide the population {n_total}")
+
+    def step(hp: GDHParams, state: GDState, key):
+        d = state.w.shape[0]
+        k_g, k_p = jax.random.split(key)                     # == dense split
+        k_sel = jax.random.fold_in(k_p, COHORT_SALT)
+        idx = cohort_indices(k_sel, n_total, cohort)
+        mask = resolve_participation(k_p, n_total, cfg.participation,
+                                     cfg.sampling, hp.p, cohort=cohort)
+        g_all = jax.vmap(
+            lambda i: local_grad(state.w, i, jax.random.fold_in(k_g, i)))(
+                idx)
+        g = masked_mean(g_all, mask)
+        per_round = mask.astype(state.bits_per_node.dtype) * (d * 32.0)
+        bits = state.bits_per_node.at[idx].add(per_round)
+        new = GDState(state.w - hp.alpha * g, state.k + 1, bits)
+        return new, {"g_tilde_norm": jnp.linalg.norm(g),
+                     "n_active": jnp.sum(mask),
+                     "cohort_bits": jnp.sum(per_round)}
 
     return step
 

@@ -1,0 +1,136 @@
+"""Dense vs sharded sweep engine: BIT-FOR-BIT equivalence on forced host
+devices.
+
+Must run in its own process: ``XLA_FLAGS=--xla_force_host_platform_device_
+count=K`` has to be set before jax is imported (tests/conftest.py keeps
+the main pytest process on the single real device).  Invoked by
+``tests/test_sharded_equivalence.py`` as
+
+    python tests/subproc/sharded_equiv.py <n_devices>
+
+and exits nonzero on the first mismatch.  The contract pinned here is the
+strongest the engine claims (see ``driver.run_sharded_sweep``): same key
+stream => the sharded run reproduces the dense run EXACTLY — every state
+leaf, the objective trace, and the integer-exact bit ledgers — because
+the engine reconstructs full-federation aggregates via
+``all_gather(tiled=True)`` + replicated server math instead of psum-ing
+float partials (psum would reassociate the f32 sum).
+"""
+import os
+import sys
+
+N_DEV = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N_DEV}"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", "src"))
+
+import jax                                                      # noqa: E402
+import jax.numpy as jnp                                         # noqa: E402
+import numpy as np                                              # noqa: E402
+
+from repro.core.driver import run_sharded_sweep, run_sweep, worker_mesh  # noqa: E402
+from repro.core.flecs import (FlecsConfig, hparam_grid, init_state,      # noqa: E402
+                              make_flecs_sharded_sweep_step,
+                              make_flecs_sweep_step, sharded_state_specs)
+from repro.core.hierarchy import HierarchyConfig                # noqa: E402
+from repro.data.logreg import make_problem                      # noqa: E402
+from repro.optim.baselines import (diana_hparam_grid,           # noqa: E402
+                                   diana_sharded_state_specs, init_diana,
+                                   make_diana_sharded_sweep_step,
+                                   make_diana_sweep_step, DianaConfig)
+
+# Two workers per device at minimum: XLA lowers a batch-1 vmapped oracle
+# as an UNBATCHED dot whose reduction order differs from the batched
+# lowering (~1 ulp), so the bitwise contract requires n_local >= 2 — see
+# the run_sharded_sweep docstring.
+N, D, ITERS = max(8, 2 * N_DEV), 12, 5
+assert N % N_DEV == 0, f"worker count {N} must divide over {N_DEV} devices"
+
+
+def check_equal(label, dense, sharded):
+    ok = True
+    for name in dense._fields:
+        a, b = getattr(dense, name), getattr(sharded, name)
+        if a is None and b is None:
+            continue
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            print(f"MISMATCH {label}: state leaf {name!r} differs "
+                  f"(max abs diff "
+                  f"{np.max(np.abs(np.asarray(a) - np.asarray(b)))})")
+            ok = False
+    return ok
+
+
+def check_traces(label, tr_d, tr_s, keys):
+    ok = True
+    for k in keys:
+        if not np.array_equal(np.asarray(tr_d[k]), np.asarray(tr_s[k])):
+            print(f"MISMATCH {label}: trace {k!r} differs")
+            ok = False
+    return ok
+
+
+def main():
+    assert jax.device_count() == N_DEV, (jax.device_count(), N_DEV)
+    prob = make_problem(d=D, n_workers=N, r=8, mu=1e-3, seed=0)
+    lg, lh = prob.make_oracles()
+    key = jax.random.key(0)
+    mesh = worker_mesh(N_DEV)
+    rec = lambda s: prob.metrics(s.w)                        # noqa: E731
+    ok = True
+
+    # FLECS: both direction modes (truncated_inverse exercises the B_bar
+    # gather; fedsonia the statically-gated zeros branch) + partial
+    # participation (exercises the psum'd integer active count).
+    hp = hparam_grid((1.0, 0.5), (1.0,), (64.0,))
+    for direction in ("fedsonia", "truncated_inverse"):
+        cfg = FlecsConfig(m=2, participation=0.6, direction=direction)
+        st0 = init_state(jnp.zeros(D), N)
+        fs_d, tr_d = run_sweep(make_flecs_sweep_step(cfg, lg, lh), hp, st0,
+                               key, ITERS, record=rec)
+        fs_s, tr_s = run_sharded_sweep(
+            make_flecs_sharded_sweep_step(cfg, lg, lh, n_total=N), hp, st0,
+            key, ITERS, sharded_state_specs(), mesh=mesh, record=rec)
+        ok &= check_equal(f"flecs/{direction}", fs_d, fs_s)
+        ok &= check_traces(f"flecs/{direction}", tr_d, tr_s,
+                           ("F", "bits_per_node", "n_active"))
+
+    # FLECS + two-tier hierarchy: the edge tier runs replicated after the
+    # gather, so sharded == dense stays bitwise (including the backhaul
+    # ledger) even though hierarchy-vs-flat is only algebraic.
+    cfg_h = FlecsConfig(m=2, participation=0.6,
+                        hierarchy=HierarchyConfig(n_edges=4))
+    hp_h = hparam_grid((1.0, 0.5), (1.0,), (64.0,), edge_levels=(16.0,))
+    st0_h = init_state(jnp.zeros(D), N, n_edges=4)
+    fs_d, tr_d = run_sweep(make_flecs_sweep_step(cfg_h, lg, lh), hp_h,
+                           st0_h, key, ITERS, record=rec)
+    fs_s, tr_s = run_sharded_sweep(
+        make_flecs_sharded_sweep_step(cfg_h, lg, lh, n_total=N), hp_h,
+        st0_h, key, ITERS, sharded_state_specs(hierarchy=True), mesh=mesh,
+        record=rec)
+    ok &= check_equal("flecs/hierarchy", fs_d, fs_s)
+    ok &= check_traces("flecs/hierarchy", tr_d, tr_s,
+                       ("F", "bits_per_node", "edge_bits"))
+
+    # DIANA: first-order baseline through the same engine.
+    dcfg = DianaConfig(participation=0.75)
+    dhp = diana_hparam_grid((1.0,), (0.5,), (64.0,))
+    dst0 = init_diana(jnp.zeros(D), N)
+    ds_d, dtr_d = run_sweep(make_diana_sweep_step(dcfg, lg), dhp, dst0,
+                            key, ITERS, record=rec)
+    ds_s, dtr_s = run_sharded_sweep(
+        make_diana_sharded_sweep_step(dcfg, lg, n_total=N), dhp, dst0,
+        key, ITERS, diana_sharded_state_specs(), mesh=mesh, record=rec)
+    ok &= check_equal("diana", ds_d, ds_s)
+    ok &= check_traces("diana", dtr_d, dtr_s,
+                       ("F", "bits_per_node", "n_active"))
+
+    if not ok:
+        print(f"SHARDED EQUIV FAILED on {N_DEV} devices")
+        return 1
+    print(f"SHARDED EQUIV OK on {N_DEV} devices "
+          f"(flecs x2 directions, hierarchy, diana — all bitwise)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

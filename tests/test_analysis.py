@@ -57,6 +57,17 @@ RULE_FIXTURES = {
         class DemoHParams(NamedTuple):
             alpha: float
         """),
+    # a cohort-engine scan body allocating a full-population intermediate
+    "R7": (CORE, """
+        import jax
+        import jax.numpy as jnp
+
+        def make_demo_cohort_sweep_step(cfg, n_total, cohort):
+            def step(hp, state, key):
+                noise = jax.random.uniform(key, (n_total,))
+                return state, {"noise": jnp.sum(noise)}
+            return step
+        """),
     # a kernel launcher in a package with no ref.py oracle (the demo/
     # package does not exist on disk, so the pairing probe fails)
     "R6": ("src/repro/kernels/demo/demo.py", """
@@ -223,6 +234,29 @@ def test_r6_real_kernel_packages_are_paired(repo_root):
     findings = lint_paths([str(repo_root / "src" / "repro" / "kernels")],
                           root=repo_root, only=["R6"])
     assert [f.format() for f in findings] == []
+
+
+def test_r7_scope_is_cohort_only_and_split_exempt():
+    """R7 ignores the same allocation under a non-cohort root (the dense
+    engines legitimately build [n] arrays), and `split` stays exempt
+    (the sharded key-gather idiom)."""
+    path, src = RULE_FIXTURES["R7"]
+    dense = textwrap.dedent(src).replace("make_demo_cohort_sweep_step",
+                                         "make_demo_sweep_step")
+    assert lint_source(dense, path) == []
+    keyed = textwrap.dedent(src).replace(
+        "jax.random.uniform(key, (n_total,))",
+        "jax.random.split(key, n_total)[:cohort]")
+    assert lint_source(keyed, path) == []
+    # init-time [N] state is outside the traced set: the ledger contract
+    init = textwrap.dedent("""
+        import jax.numpy as jnp
+        from repro.core.driver import bits_dtype
+
+        def init_cohort_state(w0, n_total):
+            return jnp.zeros((n_total,), bits_dtype())
+        """)
+    assert lint_source(init, path) == []
 
 
 def test_r5_snapshot_matches_tree_and_detects_drift():

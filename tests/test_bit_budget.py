@@ -68,6 +68,14 @@ def test_iters_for_bit_budget_edge_cases():
         iters_for_bit_budget(10, 0)
     with pytest.raises(ValueError):
         iters_for_bit_budget([], [10])
+    # non-finite budgets have no derivable scan length: fail loudly
+    # instead of silently minting an int from inf/nan
+    with pytest.raises(ValueError, match="finite"):
+        iters_for_bit_budget(float("inf"), 10)
+    with pytest.raises(ValueError, match="finite"):
+        iters_for_bit_budget(float("nan"), 10)
+    with pytest.raises(ValueError, match="finite"):
+        iters_for_bit_budget([100.0, float("inf")], [10.0, 10.0])
 
 
 def test_iters_for_bit_budget_topk_dimension_aware_price():

@@ -1,0 +1,232 @@
+"""Cohort-subsampled population engines (flecs/diana/gd) + the virtual
+population problem.
+
+The contracts pinned here:
+  * at ``cohort == n_total`` the cohort engines reproduce the dense
+    engines BIT-FOR-BIT at a single grid point, for key-stream-free
+    compressors (identity — the cohort path derives compressor keys by
+    ``fold_in(k, id)`` instead of the dense ``split(k, n)`` table, so
+    randomized specs are statistically but not bitwise aligned).  Across
+    a vmapped [G] grid the two programs' gather/scatter context steers
+    XLA's FMA fusion differently: floats agree to 1 ulp, while the
+    integer-exact ledgers and activity counters stay exactly equal;
+  * stratified selection: distinct in-stratum ids, O(cohort) by
+    construction, identity at full cohort;
+  * the participation mask is drawn over the COHORT axis only, degenerate
+    sub-one-client rates are rejected (``p * N < 1``);
+  * exact scatter billing: the persistent [N] uplink ledger accrues
+    exactly the aux ``cohort_bits`` stream, untouched clients stay at 0;
+  * the population restrictions fail loudly (L-SR1, non-dividing cohorts);
+  * ``VirtualLogReg`` re-derives shards deterministically and converges
+    under the cohort engine at N >> K.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.driver import (cohort_indices, participation_mask,
+                               run_sweep)
+from repro.core.flecs import (FlecsConfig, hparams_from_config,
+                              init_cohort_state, init_state,
+                              make_flecs_cohort_sweep_step,
+                              make_flecs_sweep_step)
+from repro.core.hierarchy import HierarchyConfig
+from repro.data.logreg import make_problem, make_virtual_problem
+from repro.optim.baselines import (DianaConfig, DianaHParams, GDConfig,
+                                   gd_hparam_grid, init_diana, init_gd,
+                                   make_diana_cohort_sweep_step,
+                                   make_diana_sweep_step,
+                                   make_gd_cohort_sweep_step,
+                                   make_gd_sweep_step)
+
+PROB = make_problem(d=12, n_workers=8, r=8, mu=1e-3, seed=0)
+LG, LH = PROB.make_oracles()
+N, D = PROB.n_workers, PROB.d
+
+VP = make_virtual_problem(d=12, n_total=1024, r=8, probe_clients=8, seed=1)
+VLG, VLH = VP.make_oracles()
+
+
+def _identity_diana_hp(alphas=(1.0,), gammas=(0.5,)):
+    from repro.core.compressors import spec_from_name
+    a = jnp.asarray(alphas, jnp.float32)
+    g = jnp.broadcast_to(jnp.asarray(gammas, jnp.float32), a.shape)
+    spec = jax.tree.map(
+        lambda v: jnp.broadcast_to(jnp.asarray(v), a.shape),
+        spec_from_name("identity"))
+    return DianaHParams(a, g, spec, None)
+
+
+# ---------------------------------------------------------------------------
+# cohort == n_total degenerates to the dense engine
+# ---------------------------------------------------------------------------
+
+def test_diana_full_cohort_matches_dense_bitwise_single_point():
+    cfg = DianaConfig(participation=0.6, compressor="identity")
+    hp = _identity_diana_hp((1.0,))
+    st0 = init_diana(jnp.zeros(D), N)
+    key = jax.random.key(0)
+    rec = lambda s: PROB.metrics(s.w)                    # noqa: E731
+    ds, dtr = run_sweep(make_diana_sweep_step(cfg, LG), hp, st0, key, 6,
+                        record=rec)
+    cs, ctr = run_sweep(make_diana_cohort_sweep_step(cfg, LG, N, N), hp,
+                        st0, key, 6, record=rec)
+    for name in ("w", "h", "bits_per_node"):
+        np.testing.assert_array_equal(np.asarray(getattr(ds, name)),
+                                      np.asarray(getattr(cs, name)), name)
+    np.testing.assert_array_equal(np.asarray(dtr["F"]), np.asarray(ctr["F"]))
+    np.testing.assert_array_equal(np.asarray(dtr["n_active"]),
+                                  np.asarray(ctr["n_active"]))
+
+
+def test_diana_full_cohort_grid_one_ulp_exact_ledgers():
+    """Under a vmapped [G] grid only the FMA fusion differs: floats to
+    1 ulp, ledgers and activity counts exact."""
+    cfg = DianaConfig(participation=0.6, compressor="identity")
+    hp = _identity_diana_hp((1.0, 0.5))
+    st0 = init_diana(jnp.zeros(D), N)
+    key = jax.random.key(0)
+    ds, dtr = run_sweep(make_diana_sweep_step(cfg, LG), hp, st0, key, 6)
+    cs, ctr = run_sweep(make_diana_cohort_sweep_step(cfg, LG, N, N), hp,
+                        st0, key, 6)
+    np.testing.assert_allclose(np.asarray(ds.w), np.asarray(cs.w),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ds.h), np.asarray(cs.h),
+                               rtol=0, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ds.bits_per_node),
+                                  np.asarray(cs.bits_per_node))
+    np.testing.assert_array_equal(np.asarray(dtr["n_active"]),
+                                  np.asarray(ctr["n_active"]))
+
+
+def test_gd_full_cohort_matches_dense_bitwise_single_point():
+    cfg = GDConfig(participation=0.75)
+    hp = gd_hparam_grid((1.0,))
+    st0 = init_gd(jnp.zeros(D), N)
+    key = jax.random.key(2)
+    ds, dtr = run_sweep(make_gd_sweep_step(cfg, LG, N), hp, st0, key, 5)
+    cs, ctr = run_sweep(make_gd_cohort_sweep_step(cfg, LG, N, N), hp, st0,
+                        key, 5)
+    np.testing.assert_array_equal(np.asarray(ds.w), np.asarray(cs.w))
+    np.testing.assert_array_equal(np.asarray(ds.bits_per_node),
+                                  np.asarray(cs.bits_per_node))
+
+
+# ---------------------------------------------------------------------------
+# selection + participation
+# ---------------------------------------------------------------------------
+
+def test_cohort_indices_stratified_distinct():
+    n_total, cohort = 1024, 64
+    stride = n_total // cohort
+    idx = np.asarray(cohort_indices(jax.random.key(0), n_total, cohort))
+    assert idx.shape == (cohort,) and idx.dtype == np.int32
+    assert len(set(idx.tolist())) == cohort                  # distinct
+    for i, v in enumerate(idx):                              # one per stratum
+        assert i * stride <= v < (i + 1) * stride
+    # full cohort is the identity selection
+    np.testing.assert_array_equal(
+        np.asarray(cohort_indices(jax.random.key(1), 8, 8)), np.arange(8))
+    with pytest.raises(ValueError, match="cohort"):
+        cohort_indices(jax.random.key(0), 8, 0)
+    with pytest.raises(ValueError, match="cohort"):
+        cohort_indices(jax.random.key(0), 8, 16)
+    with pytest.raises(ValueError, match="divide"):
+        cohort_indices(jax.random.key(0), 10, 4)
+
+
+def test_participation_mask_cohort_axis():
+    key = jax.random.key(5)
+    m = participation_mask(key, 100_000, 0.5, cohort=64)
+    assert m.shape == (64,)                                  # never [N]
+    # cohort == n reproduces the dense draw bit-for-bit
+    np.testing.assert_array_equal(
+        np.asarray(participation_mask(key, 64, 0.5, cohort=64)),
+        np.asarray(participation_mask(key, 64, 0.5)))
+    # a rate that expects < 1 client per round over the population is a
+    # mis-scaled config, not a valid run
+    with pytest.raises(ValueError, match="p\\*n"):
+        participation_mask(key, 100_000, 1e-6)
+    with pytest.raises(ValueError, match="p\\*n"):
+        participation_mask(key, 100_000, 1e-6, cohort=64)
+
+
+# ---------------------------------------------------------------------------
+# the population FLECS engine
+# ---------------------------------------------------------------------------
+
+def test_flecs_cohort_converges_and_bills_exactly():
+    n_total, cohort, iters = 1024, 64, 8
+    cfg = FlecsConfig(m=2, participation=0.5)
+    hp = jax.tree.map(lambda a: jnp.asarray(a)[None],
+                      hparams_from_config(cfg))
+    step = make_flecs_cohort_sweep_step(cfg, VLG, VLH, n_total, cohort)
+    st0 = init_cohort_state(jnp.zeros(VP.d), n_total)
+    assert st0.B.shape == (VP.d, VP.d)                       # SHARED curvature
+    fs, tr = run_sweep(step, hp, st0, jax.random.key(3), iters,
+                       record=lambda s: VP.metrics(s.w))
+    F = np.asarray(tr["F"][0])
+    assert F[-1] < F[0]                                      # makes progress
+    # exact scatter billing: the ledger total is the aux stream's total,
+    # and at most cohort x iters clients were ever billed
+    bits = np.asarray(fs.bits_per_node[0])
+    assert bits.shape == (n_total,)
+    np.testing.assert_allclose(bits.sum(),
+                               np.asarray(tr["cohort_bits"][0]).sum(),
+                               rtol=1e-6)
+    assert 0 < (bits > 0).sum() <= cohort * iters
+    assert fs.edge_bits is None
+
+
+def test_flecs_cohort_hierarchy_bills_backhaul():
+    n_total, cohort, E = 1024, 64, 8
+    cfg = FlecsConfig(m=2, participation=0.5,
+                      hierarchy=HierarchyConfig(n_edges=E))
+    hp = jax.tree.map(lambda a: jnp.asarray(a)[None],
+                      hparams_from_config(cfg))
+    step = make_flecs_cohort_sweep_step(cfg, VLG, VLH, n_total, cohort)
+    st0 = init_cohort_state(jnp.zeros(VP.d), n_total, n_edges=E)
+    fs, tr = run_sweep(step, hp, st0, jax.random.key(4), 4)
+    eb = np.asarray(fs.edge_bits[0])
+    assert eb.shape == (E,) and eb.sum() > 0
+    assert "edge_bits" in tr
+
+
+def test_cohort_engine_guards():
+    cfg_lsr1 = FlecsConfig(m=2, hessian_update="lsr1")
+    with pytest.raises(ValueError, match="direct"):
+        make_flecs_cohort_sweep_step(cfg_lsr1, VLG, VLH, 1024, 64)
+    cfg = FlecsConfig(m=2)
+    with pytest.raises(ValueError, match="divide"):
+        make_flecs_cohort_sweep_step(cfg, VLG, VLH, 1000, 64)
+    with pytest.raises(ValueError, match="cohort"):
+        make_flecs_cohort_sweep_step(cfg, VLG, VLH, 64, 128)
+    with pytest.raises(ValueError, match="divide"):
+        make_diana_cohort_sweep_step(DianaConfig(), VLG, 1000, 64)
+    with pytest.raises(ValueError, match="divide"):
+        make_gd_cohort_sweep_step(GDConfig(), VLG, 1000, 64)
+
+
+# ---------------------------------------------------------------------------
+# the virtual population problem
+# ---------------------------------------------------------------------------
+
+def test_virtual_problem_contract():
+    # shards are re-derived, not stored: same client, same data
+    g1 = VLG(jnp.zeros(VP.d), jnp.int32(17), jax.random.key(0))
+    g2 = VLG(jnp.zeros(VP.d), jnp.int32(17), jax.random.key(9))
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g2))
+    g3 = VLG(jnp.zeros(VP.d), jnp.int32(18), jax.random.key(0))
+    assert not np.array_equal(np.asarray(g1), np.asarray(g3))
+    # the probe metrics carry the schema downstream recorders expect
+    m = VP.metrics(jnp.zeros(VP.d))
+    assert set(m) == {"F", "grad_sq"}
+    ids = np.asarray(VP.probe_ids)
+    assert ids.shape == (8,) and len(set(ids.tolist())) == 8
+    assert ids.max() < VP.n_workers
+    # minibatching is a FederatedLogReg feature, not a virtual one
+    with pytest.raises(ValueError, match="batch"):
+        VP.make_oracles(batch=4)
+    with pytest.raises(ValueError, match="probe_clients"):
+        make_virtual_problem(d=4, n_total=8, probe_clients=9)

@@ -1,0 +1,211 @@
+"""Two-tier hierarchical aggregation (repro.core.hierarchy).
+
+Pins the subsystem's contracts:
+  * identity edge spec collapses to the flat server ALGEBRAICALLY — the
+    two-stage sum reassociates the f32 reduction, so iterates match at
+    tight tolerance while the integer-exact uplink ledgers stay bitwise;
+  * backhaul billing is exact arithmetic: active edges pay
+    ``edge_round_bits`` per round, idle edges pay (and contribute) nothing;
+  * the cohort combiner (segment_sum) equals the full-axis combiner;
+  * the edge spec is a TRACED sweep axis (``hparam_grid(edge_levels=...)``)
+    and rides ``ExperimentPlan`` under one-compile-per-figure;
+  * ``spec_commutes_with_sum`` knows which families commute (identity yes,
+    dithering/natural/top-k no);
+  * the guards fail loudly: missing edge_spec/edge_bits, non-dividing
+    n_edges, empty trees.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.api import ExperimentPlan, MethodRun, run_plan
+from repro.core.compressors import spec_commutes_with_sum, spec_from_name
+from repro.core.driver import bits_dtype, masked_mean, run_sweep
+from repro.core.flecs import (FlecsConfig, hparam_grid, init_state,
+                              make_flecs_sweep_step)
+from repro.core.hierarchy import (HierarchyConfig, charge_edges,
+                                  edge_combine, edge_combine_cohort, edge_of,
+                                  edge_round_bits, init_edge_bits,
+                                  validate_hierarchy)
+from repro.data.logreg import make_problem
+
+PROB = make_problem(d=12, n_workers=8, r=8, mu=1e-3, seed=0)
+LG, LH = PROB.make_oracles()
+N, D = PROB.n_workers, PROB.d
+
+
+def _identity_edge_hp(hp):
+    """Broadcast an identity edge spec across the [G] grid."""
+    G = hp.alpha.shape[0]
+    eid = jax.tree.map(lambda a: jnp.broadcast_to(jnp.asarray(a), (G,)),
+                       spec_from_name("identity"))
+    return hp._replace(edge_spec=eid)
+
+
+# ---------------------------------------------------------------------------
+# identity edge == flat server (algebraic), exact uplink ledgers
+# ---------------------------------------------------------------------------
+
+def test_identity_edge_collapses_to_flat_server():
+    hp = hparam_grid((1.0, 0.5), (1.0,), (64.0,))
+    key = jax.random.key(0)
+    rec = lambda s: PROB.metrics(s.w)                    # noqa: E731
+    cfg = FlecsConfig(m=2, participation=0.6)
+    fs_f, tr_f = run_sweep(make_flecs_sweep_step(cfg, LG, LH), hp,
+                           init_state(jnp.zeros(D), N), key, 6, record=rec)
+    cfg_h = FlecsConfig(m=2, participation=0.6,
+                        hierarchy=HierarchyConfig(n_edges=4))
+    fs_h, tr_h = run_sweep(make_flecs_sweep_step(cfg_h, LG, LH),
+                           _identity_edge_hp(hp),
+                           init_state(jnp.zeros(D), N, n_edges=4), key, 6,
+                           record=rec)
+    # same terms, same denominator — equal up to f32 reassociation only
+    np.testing.assert_allclose(np.asarray(tr_h["F"]), np.asarray(tr_f["F"]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(fs_h.w), np.asarray(fs_f.w),
+                               rtol=1e-5, atol=1e-6)
+    # the uplink ledger is untouched by the server tree: bitwise
+    np.testing.assert_array_equal(np.asarray(fs_h.bits_per_node),
+                                  np.asarray(fs_f.bits_per_node))
+    assert fs_f.edge_bits is None and fs_h.edge_bits is not None
+
+
+# ---------------------------------------------------------------------------
+# backhaul billing
+# ---------------------------------------------------------------------------
+
+def test_edge_ledger_arithmetic_exact_full_participation():
+    """p=1: every edge is active every round, so each edge's ledger is
+    exactly iters x edge_round_bits (identity prices the full f32 payload:
+    32(d + d·m + m·m))."""
+    m, E, iters = 2, 4, 5
+    cfg = FlecsConfig(m=m, hierarchy=HierarchyConfig(n_edges=E))
+    hp = _identity_edge_hp(hparam_grid((1.0,), (1.0,), (64.0,)))
+    fs, tr = run_sweep(make_flecs_sweep_step(cfg, LG, LH), hp,
+                       init_state(jnp.zeros(D), N, n_edges=E),
+                       jax.random.key(1), iters)
+    price = float(edge_round_bits(spec_from_name("identity"), D, m))
+    assert price == 32.0 * (D + D * m + m * m)
+    np.testing.assert_array_equal(np.asarray(fs.edge_bits),
+                                  np.full((1, E), iters * price))
+    # edge_bits rides the trace stream in the ledger dtype
+    assert tr["edge_bits"].shape == (1, iters, E)
+    assert tr["edge_bits"].dtype == bits_dtype()
+
+
+def test_idle_edges_ship_nothing_and_pay_nothing():
+    led = charge_edges(init_edge_bits(3), jnp.asarray([0.0, 2.0, 1.0]), 10.0)
+    np.testing.assert_array_equal(np.asarray(led), [0.0, 10.0, 10.0])
+    # an idle edge contributes EXACT zeros to the combine even under a
+    # randomized (dithering) edge spec — the gate zeroes the payload
+    x = jnp.arange(8.0).reshape(8, 1) + 1.0
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0, 1.0])
+    total, edge_active = edge_combine(spec_from_name("dither64"),
+                                      jax.random.key(2), x, mask, n_edges=4)
+    np.testing.assert_array_equal(np.asarray(edge_active), [2.0, 0.0, 1.0, 2.0])
+    # recompute with the idle block's values mangled: identical result
+    x_mangled = x.at[2:4].set(1e6)
+    total2, _ = edge_combine(spec_from_name("dither64"), jax.random.key(2),
+                             x_mangled, mask, n_edges=4)
+    np.testing.assert_array_equal(np.asarray(total), np.asarray(total2))
+
+
+def test_identity_edge_combine_matches_masked_mean():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 5)), jnp.float32)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 0.0])
+    total, _ = edge_combine(spec_from_name("identity"), jax.random.key(0),
+                            x, mask, n_edges=4)
+    want = masked_mean(x, mask) * jnp.maximum(jnp.sum(mask), 1.0)
+    np.testing.assert_allclose(np.asarray(total), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_cohort_combine_matches_full_axis():
+    """ids = arange(n) makes the cohort combiner the full combiner; exact
+    on integer-valued payloads (order-free f32 sums)."""
+    x = jnp.asarray(np.random.default_rng(1).integers(-8, 8, (8, 3)),
+                    jnp.float32)
+    mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0])
+    ids = jnp.arange(8)
+    spec = spec_from_name("identity")
+    full, act_full = edge_combine(spec, jax.random.key(3), x, mask, 4)
+    coh, act_coh = edge_combine_cohort(spec, jax.random.key(3), x, mask,
+                                       ids, n_total=8, n_edges=4)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(coh))
+    np.testing.assert_array_equal(np.asarray(act_full), np.asarray(act_coh))
+    # a PARTIAL cohort only touches its members' edges
+    sub = jnp.asarray([0, 1, 6, 7])
+    _, act_sub = edge_combine_cohort(spec, jax.random.key(3), x[sub],
+                                     mask[sub], sub, n_total=8, n_edges=4)
+    np.testing.assert_array_equal(np.asarray(act_sub), [2.0, 0.0, 0.0, 2.0])
+
+
+def test_edge_of_contiguous_blocks():
+    np.testing.assert_array_equal(
+        np.asarray(edge_of(jnp.arange(8), 8, 4)), [0, 0, 1, 1, 2, 2, 3, 3])
+    assert init_edge_bits(3).dtype == bits_dtype()
+
+
+# ---------------------------------------------------------------------------
+# the edge spec as a traced sweep axis
+# ---------------------------------------------------------------------------
+
+def test_edge_levels_traced_axis_prices_per_point():
+    """A (grad x edge) grid runs as ONE sweep; each point's backhaul
+    ledger is exactly iters x edge_round_bits(its edge level)."""
+    m, E, iters = 2, 4, 4
+    cfg = FlecsConfig(m=m, hierarchy=HierarchyConfig(n_edges=E))
+    hp = hparam_grid((1.0,), (1.0,), (64.0,), edge_levels=(8.0, 64.0))
+    assert hp.alpha.shape == (2,)
+    fs, _ = run_sweep(make_flecs_sweep_step(cfg, LG, LH), hp,
+                      init_state(jnp.zeros(D), N, n_edges=E),
+                      jax.random.key(4), iters)
+    bits = np.asarray(fs.edge_bits)                          # [2, E]
+    for g, level in enumerate((8.0, 64.0)):
+        price = float(edge_round_bits(spec_from_name(f"dither{int(level)}"),
+                                      D, m))
+        np.testing.assert_array_equal(bits[g], np.full(E, iters * price))
+    assert bits[0, 0] < bits[1, 0]              # coarser backhaul is cheaper
+
+
+def test_plan_runs_hierarchy_one_compile():
+    """ExperimentPlan wires n_edges into init_state and the edge spec into
+    the default hparams — the whole figure stays one compiled program."""
+    cfg = FlecsConfig(m=2, hierarchy=HierarchyConfig(n_edges=4,
+                                                     edge_compressor="dither64"))
+    plan = ExperimentPlan(problem=PROB,
+                          runs=(MethodRun("flecs_cgd", cfg=cfg),), iters=4)
+    before = api.plan_compiles()
+    res = run_plan(plan)
+    assert api.plan_compiles() - before == 1
+    eb = np.asarray(res.states["flecs_cgd"].edge_bits)
+    price = float(edge_round_bits(spec_from_name("dither64"), D, cfg.m))
+    np.testing.assert_array_equal(eb, np.full((1, 4), 4 * price))
+
+
+# ---------------------------------------------------------------------------
+# commutation predicate + guards
+# ---------------------------------------------------------------------------
+
+def test_spec_commutes_with_sum_by_family():
+    assert bool(spec_commutes_with_sum(spec_from_name("identity")))
+    for name in ("dither64", "natural", "topk0.25"):
+        assert not bool(spec_commutes_with_sum(spec_from_name(name))), name
+
+
+def test_hierarchy_guards():
+    cfg = FlecsConfig(m=2, hierarchy=HierarchyConfig(n_edges=4))
+    step = make_flecs_sweep_step(cfg, LG, LH)
+    hp = hparam_grid((1.0,), (1.0,), (64.0,))            # no edge_spec
+    st = init_state(jnp.zeros(D), N, n_edges=4)
+    with pytest.raises(ValueError, match="edge_spec"):
+        run_sweep(step, hp, st, jax.random.key(0), 2)
+    with pytest.raises(ValueError, match="backhaul"):    # no backhaul ledger
+        run_sweep(step, _identity_edge_hp(hp),
+                  init_state(jnp.zeros(D), N), jax.random.key(0), 2)
+    with pytest.raises(ValueError, match="divide"):      # 3 does not divide 8
+        validate_hierarchy(HierarchyConfig(n_edges=3), N)
+    with pytest.raises(ValueError, match="n_edges"):
+        HierarchyConfig(n_edges=0)

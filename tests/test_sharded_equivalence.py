@@ -1,0 +1,84 @@
+"""The sharded sweep engine's bit-for-bit contract.
+
+The multi-device halves run ``tests/subproc/sharded_equiv.py`` in
+subprocesses (XLA's forced-host-device flag must be set before jax is
+imported — see conftest.py); the in-process half pins the degenerate
+1-device mesh against :func:`repro.core.driver.run_sweep` on the real
+device, plus the engine's guard rails (spec validation, divisibility).
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.driver import run_sharded_sweep, run_sweep, worker_mesh
+from repro.core.flecs import (FlecsConfig, hparam_grid, init_state,
+                              make_flecs_sharded_sweep_step,
+                              make_flecs_sweep_step, sharded_state_specs)
+from repro.data.logreg import make_problem
+
+ROOT = Path(__file__).resolve().parents[1]
+SCRIPT = ROOT / "tests" / "subproc" / "sharded_equiv.py"
+
+
+def _run_equiv(devices: int):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    out = subprocess.run([sys.executable, str(SCRIPT), str(devices)],
+                         env=env, capture_output=True, text=True,
+                         timeout=540)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert f"SHARDED EQUIV OK on {devices} devices" in out.stdout
+
+
+def test_sharded_equals_dense_two_devices():
+    """The acceptance bar: dense == sharded bitwise on 2 forced devices
+    (flecs both directions, the two-tier hierarchy, and diana)."""
+    _run_equiv(2)
+
+
+@pytest.mark.slow
+def test_sharded_equals_dense_eight_devices():
+    """Same contract at 8 devices (2 workers per device — the bitwise
+    floor; see the n_local >= 2 caveat on run_sharded_sweep)."""
+    _run_equiv(8)
+
+
+def test_one_device_mesh_degenerates_to_run_sweep():
+    """A 1-device mesh runs in-process on the real device and must equal
+    run_sweep exactly — same vmap batch, same server math, no collectives
+    that could reassociate anything."""
+    prob = make_problem(d=10, n_workers=4, r=8, mu=1e-3, seed=3)
+    lg, lh = prob.make_oracles()
+    cfg = FlecsConfig(m=2, participation=0.6)
+    hp = hparam_grid((1.0,), (1.0,), (64.0,))
+    st0 = init_state(jnp.zeros(prob.d), prob.n_workers)
+    key = jax.random.key(7)
+    rec = lambda s: prob.metrics(s.w)                    # noqa: E731
+    fs_d, tr_d = run_sweep(make_flecs_sweep_step(cfg, lg, lh), hp, st0,
+                           key, 4, record=rec)
+    fs_s, tr_s = run_sharded_sweep(
+        make_flecs_sharded_sweep_step(cfg, lg, lh, n_total=prob.n_workers),
+        hp, st0, key, 4, sharded_state_specs(), mesh=worker_mesh(1),
+        record=rec)
+    for name in fs_d._fields:
+        a, b = getattr(fs_d, name), getattr(fs_s, name)
+        if a is None and b is None:
+            continue
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    np.testing.assert_array_equal(np.asarray(tr_d["F"]),
+                                  np.asarray(tr_s["F"]))
+    np.testing.assert_array_equal(np.asarray(tr_d["bits_per_node"]),
+                                  np.asarray(tr_s["bits_per_node"]))
+
+
+def test_worker_mesh_guards():
+    """The mesh factory rejects device counts the host cannot supply."""
+    with pytest.raises(ValueError):
+        worker_mesh(jax.device_count() + 1)
