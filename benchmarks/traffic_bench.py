@@ -1,0 +1,150 @@
+"""Traffic-profile benchmark: objective-per-bit under structured traffic.
+
+Runs the five-method comparison (FLECS, FLECS-CGD, DIANA, async FedNL,
+GD) on the buffered engine under three arrival profiles:
+
+fixed:    the plain ``StalenessSchedule`` delay (every message arrives
+          exactly tau rounds late) — the pre-traffic async baseline;
+poisson:  Poisson-thinned completion at a single rate, plus the default
+          availability chain and a staleness-cutoff/in-flight admission
+          policy (``repro.core.traffic``);
+diurnal:  the same, against a 4-phase piecewise-constant rate table
+          (rush hours and lulls).
+
+Each profile is ONE ``run_plan`` call lowering all five methods into ONE
+compiled program (asserted via ``api.plan_compiles``); the traffic model
+rides the async hparam pytrees as traced leaves.
+
+As a CLI this writes ``benchmarks/out/traffic_bench.json``::
+
+    {"meta": {... exact-matched coverage: sizes, profiles, methods,
+              one_compile_per_profile ...},
+     "rows": [{"profile": ..., "method": ..., "F": ..., "Mbits_mean": ...}]}
+
+gated by ``scripts/check_bench_drift.py traffic_bench.json``: the meta
+and the row labels match EXACTLY; F and Mbits_mean (PRNG-stream
+dependent under thinned arrivals) ride the tolerant keys.  Refresh with
+``--update`` after an intentional change.  ``--toy`` is the CI size
+class::
+
+    PYTHONPATH=src python benchmarks/traffic_bench.py --toy
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+OUT = Path(__file__).resolve().parent / "out"
+SRC = Path(__file__).resolve().parents[1] / "src"
+sys.path.insert(0, str(SRC))
+
+METHODS = ("flecs", "flecs_cgd", "diana", "fednl", "gd")
+PROFILES = ("fixed", "poisson", "diurnal")
+DIURNAL_RATES = (0.9, 0.5, 0.2, 0.5)
+POISSON_RATE = 0.6
+
+
+def traffic_model(profile: str):
+    """The per-profile TrafficModel (None for the fixed-delay baseline)."""
+    from repro.core.traffic import (AdmissionPolicy, ArrivalSchedule,
+                                    AvailabilityModel, TrafficModel)
+    if profile == "fixed":
+        return None
+    arrival = (ArrivalSchedule("poisson", rates=(POISSON_RATE,))
+               if profile == "poisson"
+               else ArrivalSchedule("diurnal", rates=DIURNAL_RATES))
+    return TrafficModel(arrival=arrival,
+                        availability=AvailabilityModel(),
+                        admission=AdmissionPolicy(staleness_cutoff=3.0,
+                                                  max_in_flight=6.0))
+
+
+def traffic_plan(prob, profile: str, iters: int, tau: int):
+    from repro.core.api import ExperimentPlan, MethodRun
+    from repro.core.driver import StalenessSchedule
+    from repro.optim.baselines import FedNLConfig
+
+    def run(m):
+        if m != "fednl":
+            return MethodRun(m)
+        # damp the Newton step: a full alpha=1 step against a stale,
+        # partially-accumulated Hessian overshoots into a chaotic
+        # (PRNG-sensitive) regime no drift tolerance survives
+        return MethodRun(m, cfg=FedNLConfig(alpha=0.5, mu=prob.mu))
+
+    return ExperimentPlan(
+        problem=prob, runs=tuple(run(m) for m in METHODS),
+        iters=iters, seed=0,
+        staleness=StalenessSchedule("fixed", tau=tau), buffer_k=2.0,
+        traffic=traffic_model(profile))
+
+
+def run_profiles(prob, iters: int, tau: int):
+    """One run_plan (ONE compiled program, asserted) per profile; returns
+    (rows, one_compile_per_profile)."""
+    import numpy as np
+
+    from repro.core import api
+    from repro.core.api import run_plan
+
+    rows = []
+    one_compile = True
+    for profile in PROFILES:
+        before = api.plan_compiles()
+        res = run_plan(traffic_plan(prob, profile, iters, tau))
+        one_compile &= (api.plan_compiles() - before) == 1
+        for m in METHODS:
+            F = float(np.asarray(res.traces[m]["F"])[0, -1])
+            mbits = float(np.mean(np.asarray(
+                res.states[m].bits_per_node[0]))) / 1e6
+            assert np.isfinite(F), (profile, m)
+            rows.append({"profile": profile, "method": m,
+                         "F": F, "Mbits_mean": mbits})
+    return rows, one_compile
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--toy", action="store_true",
+                    help="CI size class (small problem, few rounds)")
+    ap.add_argument("--iters", type=int, default=None)
+    args = ap.parse_args()
+
+    from repro.data.logreg import make_problem
+    if args.toy:
+        d, workers, r, iters, tau = 12, 4, 12, 8, 2
+    else:
+        d, workers, r, iters, tau = 40, 8, 64, 60, 4
+    if args.iters is not None:
+        iters = args.iters
+    prob = make_problem(d=d, n_workers=workers, r=r, mu=1e-3, seed=0)
+
+    rows, one_compile = run_profiles(prob, iters, tau)
+    assert one_compile, "a traffic profile compiled more than one program"
+
+    out = {"meta": {"d": d, "workers": workers, "r": r, "iters": iters,
+                    "tau": tau, "buffer_k": 2.0, "toy": bool(args.toy),
+                    "profiles": list(PROFILES), "methods": list(METHODS),
+                    "diurnal_rates": list(DIURNAL_RATES),
+                    "poisson_rate": POISSON_RATE,
+                    "one_compile_per_profile": one_compile},
+           "rows": rows}
+    OUT.mkdir(exist_ok=True)
+    with open(OUT / "traffic_bench.json", "w") as fh:
+        json.dump(out, fh, indent=1)
+
+    print("=== Traffic profiles: five methods x {fixed, poisson, diurnal}, "
+          "ONE program per profile ===")
+    print(f"{'profile':8s} {'method':10s} {'F@end':>10s} {'Mbits/node':>11s} "
+          f"{'F per Mbit':>11s}")
+    for row in rows:
+        per_bit = row["F"] / max(row["Mbits_mean"], 1e-12)
+        print(f"{row['profile']:8s} {row['method']:10s} {row['F']:10.5f} "
+              f"{row['Mbits_mean']:11.4f} {per_bit:11.3f}")
+    print(f"\nwrote {OUT / 'traffic_bench.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -32,14 +32,26 @@ each run's scan length a spec-aware upper bound from
 x-axis the paper's headline claim lives on: FLECS-CGD wins per transmitted
 bit, not per round.
 
-With --staleness TAU > 0 the flecs/flecs_cgd/diana/gd rows switch to the
-FedBuff-style async engine: updates arrive TAU rounds late (per
---delay-kind), buffer on the server until --buffer-k have accumulated, and
-bits are charged at the arrival round — the extra stale/round column
-reports the mean age of applied updates (FedNL has no async variant and is
-skipped).  --auto-alpha replaces the hand-tuned per-mode step sizes with
+With --staleness TAU > 0 every row — FedNL included, via its compressed-
+Hessian-diff async variant — switches to the FedBuff-style async engine:
+updates arrive TAU rounds late (per --delay-kind), buffer on the server
+until --buffer-k have accumulated, and bits are charged at the arrival
+round — the extra stale/round column reports the mean age of applied
+updates.  --auto-alpha replaces the hand-tuned per-mode step sizes with
 the variance-motivated ``driver.damped_alpha`` rule (alpha0 · min(1,
 p·K/n)).
+
+--arrival-profile swaps the delay model for a ``repro.core.traffic``
+arrival process (requires --staleness, whose TAU stays the delay cap):
+
+    fixed:    the plain --delay-kind StalenessSchedule draw (default);
+    poisson:  Poisson-thinned completion — each in-flight message lands
+              with probability 0.6 per round (geometric service time);
+    diurnal:  the same thinning against a 4-phase piecewise-constant
+              rate table (rush hours and lulls).
+
+    PYTHONPATH=src python examples/federated_logreg.py --staleness 4 \
+        --arrival-profile diurnal --participation 0.5
 """
 import argparse
 
@@ -52,6 +64,7 @@ from repro.core.api import ExperimentPlan, MethodRun, run_plan
 from repro.core.compressors import spec_from_name
 from repro.core.driver import StalenessSchedule, damped_alpha
 from repro.core.flecs import FlecsConfig, FlecsHParams
+from repro.core.traffic import ArrivalSchedule, TrafficModel
 from repro.data.logreg import make_problem
 from repro.optim.baselines import (DianaConfig, DianaHParams, FedNLConfig,
                                    FedNLHParams, GDConfig, GDHParams)
@@ -81,12 +94,6 @@ def build_runs(args, prob, ps, alphas):
             spec_from_name(name))
 
     names = METHOD_ORDER if args.method == "all" else (args.method,)
-    if args.staleness > 0 and "fednl" in names:
-        if args.method == "fednl":
-            raise SystemExit("FedNL has no async variant; drop --staleness")
-        print("(FedNL skipped: no async variant)")
-        names = tuple(n for n in names if n != "fednl")
-
     budgeted = args.bit_budget > 0
     runs = []
     for name in names:
@@ -170,6 +177,13 @@ def main():
                          "(0 = synchronous)")
     ap.add_argument("--delay-kind", choices=("fixed", "uniform", "geometric"),
                     default="fixed")
+    ap.add_argument("--arrival-profile",
+                    choices=("fixed", "poisson", "diurnal"), default="fixed",
+                    help="arrival process for async rounds: 'fixed' keeps "
+                         "the --delay-kind StalenessSchedule draw; "
+                         "'poisson'/'diurnal' Poisson-thin completions by a "
+                         "flat / 4-phase rate table (repro.core.traffic), "
+                         "capped at --staleness")
     ap.add_argument("--buffer-k", type=int, default=0,
                     help="FedBuff aggregation goal (0 = auto: n/4, min 1)")
     ap.add_argument("--auto-alpha", action="store_true",
@@ -207,6 +221,18 @@ def main():
         alphas = [1.0 if (p >= 1.0 and tau == 0)
                   else (0.5 if tau == 0 else 0.2) for p in ps]
 
+    if args.arrival_profile != "fixed":
+        if tau <= 0:
+            raise SystemExit("--arrival-profile rides the async engine; "
+                             "set --staleness TAU > 0 (TAU caps the delays)")
+        arrival = (ArrivalSchedule("poisson", rates=(0.6,))
+                   if args.arrival_profile == "poisson"
+                   else ArrivalSchedule("diurnal",
+                                        rates=(0.9, 0.5, 0.2, 0.5)))
+        traffic = TrafficModel(arrival=arrival)
+    else:
+        traffic = None
+
     plan = ExperimentPlan(
         problem=prob,
         runs=tuple(build_runs(args, prob, ps, alphas)),
@@ -214,7 +240,8 @@ def main():
         staleness=(StalenessSchedule(args.delay_kind, tau=tau)
                    if tau > 0 else None),
         buffer_k=K,
-        bit_budget=args.bit_budget if args.bit_budget > 0 else None)
+        bit_budget=args.bit_budget if args.bit_budget > 0 else None,
+        traffic=traffic)
     res = run_plan(plan)
     assert api.plan_compiles() == api.plan_programs() == 1, \
         "the example must lower to exactly one compiled program"

@@ -51,4 +51,11 @@ for ((i = 0; i < shards; i++)); do
     cat "${logs[$i]}"
     rm -f "${logs[$i]}"
 done
+
+# Traffic-profile bench (five methods x {fixed, poisson, diurnal}, one
+# compiled program per profile) + drift gate against the committed golden
+python benchmarks/traffic_bench.py --toy || rc=1
+python scripts/check_bench_drift.py --golden benchmarks/out/golden \
+    --out benchmarks/out traffic_bench.json || rc=1
+
 exit $rc

@@ -11,6 +11,7 @@ a bare Python environment.  Importing the package registers the rules:
     R5  hparam-pytrees-grow-trailing-defaults-only (rules_pytree)
     R6  kernel-ref-pairing                  (rules_kernels)
     R7  cohort-scan-bodies-stay-population-free (rules_cohort)
+    R8  traffic-schedules-ride-scan-state      (rules_traffic)
     R0  (meta) suppressions must carry a justification
 
 Layer 2 (``repro.analysis.semantic``) imports jax but compiles nothing —
@@ -23,12 +24,13 @@ rule docs and the suppression syntax.
 from repro.analysis.engine import (Finding, ModuleContext, Rule, RULES,
                                    get_rules, lint_paths, lint_source)
 from repro.analysis import (rules_cohort, rules_imports, rules_kernels,
-                            rules_ledger, rules_pytree, rules_trace)
+                            rules_ledger, rules_pytree, rules_trace,
+                            rules_traffic)
 
 #: Importing a rule module registers its rules (the @rule decorator);
 #: keeping the modules on the public surface documents that side effect.
 RULE_MODULES = (rules_trace, rules_ledger, rules_imports, rules_pytree,
-                rules_kernels, rules_cohort)
+                rules_kernels, rules_cohort, rules_traffic)
 
 __all__ = ["Finding", "ModuleContext", "Rule", "RULES", "RULE_MODULES",
            "get_rules", "lint_paths", "lint_source"]

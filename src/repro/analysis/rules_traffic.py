@@ -1,0 +1,106 @@
+"""R8 — traffic schedules in traced scopes ride scan state, not Python loops.
+
+The traffic subsystem (``repro.core.traffic``) carries arrival rate
+tables and availability transition matrices as *hparam pytrees*
+(``TrafficHParams``) threaded through the scan: the traced step indexes
+``rate_table[(k + offset) % P]`` and gathers transition rows — it never
+rebuilds the schedule.  Materializing a schedule inside a traced scope
+(``jnp.stack([rate * f(t) for t in range(T)])``, ``jnp.asarray([...])``
+over per-hour rates, a transition matrix assembled from Python lists)
+re-traces the whole table every compile, bloats the jaxpr linearly in
+the schedule length, and — worse — silently bakes concrete rates into
+the compiled program so a sweep axis over traffic profiles stops being
+an axis at all.
+
+The rule: within the module's traced set (``rules_trace.traced_scopes``),
+a MATERIALIZING call (``asarray`` / ``array`` / ``stack`` /
+``concatenate``) must not be fed a Python literal or comprehension
+(``[...]``, ``(...)``, listcomp/genexp) when the surrounding statement
+binds or references a traffic-named identifier (``rate`` / ``rates`` /
+``rate_table`` / ``transition`` / ``avail*`` / ``profile`` /
+``schedule``).  Build the table once in ``traffic_hparams`` (host side)
+and pass it through the hparam pytree instead.
+
+Scoped to traffic-named identifiers so ordinary small constants
+(``jnp.array([0.0, 1.0])`` masks etc.) in unrelated engines stay legal.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable
+
+from repro.analysis.engine import Finding, ModuleContext, rule
+from repro.analysis.rules_trace import _in_scope, traced_scopes
+
+#: Calls that materialize a host-side sequence into a traced array.
+MATERIALIZE_FNS = {"asarray", "array", "stack", "concatenate"}
+
+#: Identifiers that (by repo convention) name traffic schedule data.
+TRAFFIC_NAME_RE = re.compile(
+    r"(^|_)(rate|rates|rate_table|transition|avail\w*|profile|schedule)($|_)")
+
+#: Argument node types that betray a Python-side schedule build.
+_LITERALISH = (ast.List, ast.Tuple, ast.ListComp, ast.GeneratorExp)
+
+
+def _materialize_name(call: ast.Call):
+    f = call.func
+    if isinstance(f, ast.Name) and f.id in MATERIALIZE_FNS:
+        return f.id
+    if isinstance(f, ast.Attribute) and f.attr in MATERIALIZE_FNS:
+        return f.attr
+    return None
+
+
+def _has_literal_arg(call: ast.Call) -> bool:
+    return any(isinstance(a, _LITERALISH)
+               for a in list(call.args) + [kw.value for kw in call.keywords])
+
+
+def _traffic_names(stmt: ast.stmt):
+    names = set()
+    for node in ast.walk(stmt):
+        name = None
+        if isinstance(node, ast.Name):
+            name = node.id
+        elif isinstance(node, ast.Attribute):
+            name = node.attr
+        if name is not None and TRAFFIC_NAME_RE.search(name):
+            names.add(name)
+    return sorted(names)
+
+
+@rule("R8", "traffic-schedules-ride-scan-state",
+      "traced scopes must carry rate tables / availability matrices as "
+      "scan-state pytrees — no Python-loop schedule materialization",
+      _in_scope)
+def check_traffic_materialization(ctx: ModuleContext) -> Iterable[Finding]:
+    findings = []
+    seen = set()
+    for root, fn in traced_scopes(ctx):
+        for stmt in ast.walk(fn):
+            if not isinstance(stmt, ast.stmt):
+                continue
+            names = None  # computed lazily; most statements have no call
+            for sub in ast.walk(stmt):
+                if not isinstance(sub, ast.Call) or id(sub) in seen:
+                    continue
+                mat = _materialize_name(sub)
+                if mat is None or not _has_literal_arg(sub):
+                    continue
+                if names is None:
+                    names = _traffic_names(stmt)
+                if not names:
+                    continue
+                seen.add(id(sub))
+                findings.append(ctx.finding(
+                    "R8", sub,
+                    f"`{mat}(...)` materializes a Python sequence for "
+                    f"traffic identifier(s) {', '.join(names)} inside "
+                    f"traced scope {fn.name!r} (reached from {root!r}) — "
+                    "build the table in `traffic_hparams` on the host and "
+                    "thread it through the hparam pytree "
+                    "(`TrafficHParams.rate_table` / `.avail_transition`) "
+                    "so the step only indexes it"))
+    return findings

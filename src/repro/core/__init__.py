@@ -8,6 +8,8 @@ Exact mode (paper-scale problems):
     from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
 Experiment engine (lax.scan runs, client sampling, vmapped sweeps):
     from repro.core.driver import run_experiment, run_sweep, run_async_sweep
+Production traffic simulation (arrivals, availability, admission):
+    from repro.core.traffic import TrafficModel, ArrivalSchedule
 DL-scale trainer (TPU-pod realization):
     from repro.core.dl_flecs import FlecsDLConfig, make_flecs_train_step
 
@@ -40,22 +42,36 @@ from repro.core.hierarchy import (EDGE_SALT, HierarchyConfig, charge_edges,
                                   edge_of, edge_round_bits, init_edge_bits,
                                   validate_hierarchy)
 from repro.core.sketch import sketch
+from repro.core.traffic import (ARRIVAL_SALT, AVAIL_SALT, AVAILABLE, BUSY,
+                                DROPPED, AdmissionPolicy, ArrivalSchedule,
+                                AvailabilityModel, TrafficHParams,
+                                TrafficModel, TrafficState, admit_arrivals,
+                                availability_step, available_mask,
+                                init_traffic_state, replay_delays,
+                                stationary_distribution, thinned_delays,
+                                traffic_hparams, traffic_send)
 
 __all__ = ["Compressor", "CompressorSpec", "compress", "get_compressor",
            "psum_level_cap", "spec_bits", "spec_bits_many",
            "spec_commutes_with_sum", "spec_from_name", "spec_omega",
            "stack_specs",
-           "COHORT_SALT", "EDGE_SALT", "FlecsAsyncHParams",
+           "ARRIVAL_SALT", "AVAILABLE", "AVAIL_SALT", "AdmissionPolicy",
+           "ArrivalSchedule", "AvailabilityModel", "BUSY",
+           "COHORT_SALT", "DROPPED", "EDGE_SALT", "FlecsAsyncHParams",
            "FlecsCohortState", "FlecsConfig", "FlecsHParams", "FlecsState",
-           "HierarchyConfig", "async_hparam_grid", "bits_per_round",
+           "HierarchyConfig", "TrafficHParams", "TrafficModel",
+           "TrafficState", "admit_arrivals", "async_hparam_grid",
+           "availability_step", "available_mask", "bits_per_round",
            "charge_edges", "cohort_indices", "damped_alpha", "edge_combine",
            "edge_combine_cohort", "edge_of", "edge_round_bits",
            "freeze_on_bit_budget", "hparam_grid", "hparams_bit_budget",
            "hparams_round_bits", "init_cohort_state", "init_edge_bits",
-           "init_state", "iters_for_bit_budget",
+           "init_state", "init_traffic_state", "iters_for_bit_budget",
            "make_flecs_cohort_sweep_step", "make_flecs_sharded_sweep_step",
            "make_flecs_step", "make_flecs_sweep_step", "participation_mask",
-           "resolve_participation", "run_async_sweep", "run_experiment",
-           "run_sharded_sweep", "run_sweep", "sharded_state_specs",
-           "sketch", "sweep_keys", "sweep_program", "validate_hierarchy",
+           "replay_delays", "resolve_participation", "run_async_sweep",
+           "run_experiment", "run_sharded_sweep", "run_sweep",
+           "sharded_state_specs", "sketch", "stationary_distribution",
+           "sweep_keys", "sweep_program", "thinned_delays",
+           "traffic_hparams", "traffic_send", "validate_hierarchy",
            "worker_mesh"]

@@ -91,6 +91,8 @@ from repro.core.compressors import spec_from_name
 from repro.core.driver import (StalenessSchedule, bits_dtype,
                                hparams_bit_budget, iters_for_bit_budget,
                                sweep_keys, sweep_program)
+from repro.core.traffic import (TrafficModel, init_traffic_state,
+                                traffic_hparams)
 from repro.optim import baselines
 
 
@@ -114,8 +116,12 @@ class MethodSpec:
                      ``make_*_step`` wrappers specialize at).
     init_async / async_sweep_step / async_wrap: the FedBuff-style buffered
                      engine (None => the method has no async variant);
-                     ``async_wrap(hp, tau, buffer_k)`` broadcasts the
-                     traced staleness axes over the grid.
+                     ``async_sweep_step(problem, cfg, delay_kind, q,
+                     traffic)`` takes the plan's optional
+                     ``repro.core.traffic`` model; ``async_wrap(hp, tau,
+                     buffer_k)`` broadcasts the traced staleness axes over
+                     the grid (the plan lowering then attaches the traced
+                     traffic leaves).
     round_bits:      (problem, cfg, hp) -> per-participating-worker uplink
                      bits of one round at each grid point ([G]) — the
                      spec-aware wire-price query ``plan.bit_budget`` uses
@@ -238,9 +244,10 @@ def _flecs_spec(name: str, default_grad: str) -> MethodSpec:
         from_config=flecs.hparams_from_config,
         init_async=lambda prob, n, cfg, max_delay: flecs.init_async_state(
             jnp.zeros(prob.d), n, cfg.m, max_delay),
-        async_sweep_step=lambda prob, cfg, kind, q:
+        async_sweep_step=lambda prob, cfg, kind, q, traffic=None:
             flecs.make_flecs_async_sweep_step(cfg, *prob.make_oracles(),
-                                              delay_kind=kind, q=q),
+                                              delay_kind=kind, q=q,
+                                              traffic=traffic),
         async_wrap=lambda hp, tau, K: _broadcast(
             hp, tau, K, flecs.FlecsAsyncHParams),
         round_bits=lambda prob, cfg, hp: flecs.hparams_round_bits(
@@ -290,9 +297,10 @@ register_method(MethodSpec(
     from_config=baselines.diana_hparams_from_config,
     init_async=lambda prob, n, cfg, max_delay: baselines.init_diana_async(
         jnp.zeros(prob.d), n, max_delay),
-    async_sweep_step=lambda prob, cfg, kind, q:
+    async_sweep_step=lambda prob, cfg, kind, q, traffic=None:
         baselines.make_diana_async_sweep_step(
-            cfg, prob.make_oracles()[0], delay_kind=kind, q=q),
+            cfg, prob.make_oracles()[0], delay_kind=kind, q=q,
+            traffic=traffic),
     async_wrap=lambda hp, tau, K: _broadcast(
         hp, tau, K, baselines.DianaAsyncHParams),
     round_bits=lambda prob, cfg, hp: baselines.diana_round_bits(
@@ -308,6 +316,14 @@ register_method(MethodSpec(
         cfg, prob.make_oracles()[0], _local_hessian(prob)),
     grid=baselines.fednl_hparam_grid,
     from_config=baselines.fednl_hparams_from_config,
+    init_async=lambda prob, n, cfg, max_delay: baselines.init_fednl_async(
+        jnp.zeros(prob.d), n, max_delay),
+    async_sweep_step=lambda prob, cfg, kind, q, traffic=None:
+        baselines.make_fednl_async_sweep_step(
+            cfg, prob.make_oracles()[0], _local_hessian(prob),
+            delay_kind=kind, q=q, traffic=traffic),
+    async_wrap=lambda hp, tau, K: _broadcast(
+        hp, tau, K, baselines.FedNLAsyncHParams),
     round_bits=lambda prob, cfg, hp: baselines.fednl_round_bits(
         cfg, hp, prob.d),
 ))
@@ -323,10 +339,10 @@ register_method(MethodSpec(
     from_config=baselines.gd_hparams_from_config,
     init_async=lambda prob, n, cfg, max_delay: baselines.init_gd_async(
         jnp.zeros(prob.d), n, max_delay),
-    async_sweep_step=lambda prob, cfg, kind, q:
+    async_sweep_step=lambda prob, cfg, kind, q, traffic=None:
         baselines.make_gd_async_sweep_step(
             cfg, prob.make_oracles()[0], prob.n_workers,
-            delay_kind=kind, q=q),
+            delay_kind=kind, q=q, traffic=traffic),
     async_wrap=lambda hp, tau, K: _broadcast(
         hp, tau, K, baselines.GDAsyncHParams),
     round_bits=lambda prob, cfg, hp: baselines.gd_round_bits(
@@ -366,9 +382,20 @@ class ExperimentPlan:
     record:      optional (state) -> dict of extra in-scan trace entries;
                  defaults to ``problem.metrics(state.w)``.
     staleness:   a ``StalenessSchedule`` switches every run to its async
-                 engine (methods without one — FedNL — fail loudly), with
-                 ``buffer_k`` the FedBuff flush threshold broadcast over
-                 each run's grid.
+                 engine (all five registry methods have one — async FedNL
+                 included; a custom MethodSpec without one fails loudly),
+                 with ``buffer_k`` the FedBuff flush threshold broadcast
+                 over each run's grid.
+    traffic:     an optional ``repro.core.traffic.TrafficModel`` layered
+                 on every run's async engine (requires ``staleness``):
+                 arrival process, availability chain, and admission policy.
+                 The lowering threads the model statically into each async
+                 step, broadcasts its traced leaves
+                 (``traffic_hparams(model)``) over each run's [G] grid
+                 (unless the run's async hparams already carry their own
+                 ``traffic`` leaves), and seeds the per-worker availability
+                 state — so a traffic-profile comparison is still ONE
+                 compiled program.
     bit_budget:  a per-node uplink bit budget (scalar) or a budget GRID
                  (sequence) — budget-fair mode.  The axis is crossed with
                  every run's hparam grid (point ``b*G + g`` pairs budget b
@@ -393,6 +420,7 @@ class ExperimentPlan:
     staleness: Optional[StalenessSchedule] = None
     buffer_k: float = 1.0
     bit_budget: Any = None
+    traffic: Optional[TrafficModel] = None
 
 
 @dataclasses.dataclass
@@ -539,10 +567,22 @@ def _resolve(plan: ExperimentPlan, run: MethodRun):
                 f"method {spec.name!r} has no async variant — drop it from "
                 "the plan or clear plan.staleness")
         sched = plan.staleness
-        step = spec.async_sweep_step(plan.problem, cfg, sched.kind, sched.q)
+        step = spec.async_sweep_step(plan.problem, cfg, sched.kind, sched.q,
+                                     plan.traffic)
         state = spec.init_async(plan.problem, n, cfg, sched.max_delay)
         if not hasattr(hp, "tau"):
             hp = spec.async_wrap(hp, sched.tau, plan.buffer_k)
+        if plan.traffic is not None:
+            # seed the availability chain and broadcast the model's traced
+            # leaves over the run's [G] grid (a run whose async hparams
+            # already carry traffic leaves keeps its own — e.g. a traffic
+            # sweep built by hand)
+            state = state._replace(traffic=init_traffic_state(n))
+            if getattr(hp, "traffic", None) is None:
+                thp = traffic_hparams(plan.traffic)
+                G = _grid_size(hp)
+                hp = hp._replace(traffic=jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (G,) + a.shape), thp))
         # the run_async_sweep buffer-shape guard: a user-supplied tau grid
         # exceeding the schedule's max_delay would wrap modulo the buffer
         # slots and silently behave as a shorter delay
@@ -554,6 +594,11 @@ def _resolve(plan: ExperimentPlan, run: MethodRun):
                 f"slot(s) but the hparam grid reaches tau={tau_max}; raise "
                 f"plan.staleness.tau to >= {tau_max}")
     else:
+        if plan.traffic is not None:
+            raise ValueError(
+                "plan.traffic rides the async engine's buffered path — set "
+                "plan.staleness (tau=0 for synchronous-delay traffic) or "
+                "drop the traffic model")
         if hasattr(hp, "tau"):
             raise ValueError(
                 f"run {spec.name!r}: async hparams (tau/buffer_k axes) "

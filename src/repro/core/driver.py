@@ -300,6 +300,10 @@ def sample_delays(kind: str, key, n: int, tau, q: float = 0.5) -> jnp.ndarray:
     if kind == "uniform":
         return jax.random.randint(key, (n,), 0, tau + 1, dtype=jnp.int32)
     if kind == "geometric":
+        # q is always a static Python float (StalenessSchedule.q or a maker
+        # default); a degenerate q makes log(q) 0/-inf and every delay NaN
+        if not 0.0 < q < 1.0:
+            raise ValueError(f"geometric q must be in (0, 1), got {q}")
         # geometric: P(delay >= t) = q^t  <=>  floor(log(u) / log(q))
         u = jax.random.uniform(key, (n,), minval=jnp.finfo(jnp.float32).tiny)
         g = jnp.floor(jnp.log(u) / jnp.log(jnp.float32(q)))

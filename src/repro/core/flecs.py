@@ -91,6 +91,8 @@ from repro.core.hierarchy import (EDGE_SALT, HierarchyConfig, charge_edges,
                                   edge_round_bits, init_edge_bits,
                                   validate_hierarchy)
 from repro.core.sketch import sketch
+from repro.core.traffic import (TrafficHParams, TrafficModel, TrafficState,
+                                admit_arrivals, traffic_send)
 from repro.core.updates import direct_update, truncated_lsr1_update
 
 
@@ -708,10 +710,13 @@ class FlecsAsyncHParams(NamedTuple):
       tau      — int32 delay-model bound (fixed delay / uniform-geometric
                  cap), traced per grid point
       buffer_k — float32 FedBuff flush threshold, traced per grid point
+      traffic  — optional traced ``repro.core.traffic`` leaves (rate
+                 tables, availability transitions, admission caps)
     """
     hp: FlecsHParams
     tau: jnp.ndarray
     buffer_k: jnp.ndarray
+    traffic: Optional[TrafficHParams] = None
 
 
 def async_hparams_from_config(cfg: FlecsConfig, tau: int,
@@ -783,6 +788,7 @@ class FlecsAsyncState(NamedTuple):
     acc_M: jnp.ndarray    # [m,m]  sum of arrived M^i
     acc_B: jnp.ndarray    # [d,d]  sum of arrived workers' updated B^i
     acc_n: jnp.ndarray    # scalar buffered-update count
+    traffic: Optional[TrafficState] = None   # availability chain state
 
 
 def init_async_state(w0: jnp.ndarray, n_workers: int, m: int,
@@ -803,7 +809,8 @@ def init_async_state(w0: jnp.ndarray, n_workers: int, m: int,
 
 def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
                                 local_hvp: Callable,
-                                delay_kind: str = "fixed", q: float = 0.5):
+                                delay_kind: str = "fixed", q: float = 0.5,
+                                traffic: Optional[TrafficModel] = None):
     """Build step(ahp: FlecsAsyncHParams, state, key) -> (state, aux) whose
     delay bound tau, flush threshold buffer_k, step sizes, beta, and
     compressor specs are ALL traced — ``driver.run_async_sweep`` vmaps a
@@ -824,6 +831,11 @@ def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
     *different* compute rounds (different sketches S_t) — exactly the
     staleness a real async federation sees.  The L-SR1 path regenerates
     each message's compute-time sketch from its buffered round stamp.
+
+    A ``traffic`` model (``repro.core.traffic``) layers arrival processes,
+    availability chains, and server admission on the same buffered path —
+    only admitted arrivals bill bits or touch h/B/the FedBuff buffer;
+    ``traffic=None`` is the plain async engine, op-for-op.
     """
     def step(ahp: FlecsAsyncHParams, state: FlecsAsyncState, key):
         hp = ahp.hp
@@ -835,7 +847,14 @@ def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
 
         mask = resolve_participation(k_p, n, cfg.participation,
                                      cfg.sampling, hp.p)
-        send_mask = mask * (1.0 - buffer_busy(state.buf))
+        base_delays = sample_delays(delay_kind, k_tau, n, ahp.tau, q)
+        if traffic is None:
+            send_mask = mask * (1.0 - buffer_busy(state.buf))
+            delays, tstate = base_delays, state.traffic
+        else:
+            send_mask, delays, tstate = traffic_send(
+                traffic, ahp.traffic, state.traffic, state.buf, mask, key,
+                state.k, ahp.tau, base_delays)
 
         # cond-gate the worker compute: in a fixed-delay cycle most rounds
         # send nothing (everyone is busy), so skip the n gradients/HVPs
@@ -855,9 +874,10 @@ def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
         msgs = {"c": c_all, "Y": C_all + BS_all, "M": M_all,
                 "t": jnp.full((n,), state.k, jnp.float32)}
 
-        delays = sample_delays(delay_kind, k_tau, n, ahp.tau, q)
         buf = buffer_send(state.buf, msgs, send_mask, delays, state.k)
         buf, msg, arrived = buffer_receive(buf, state.k)
+        arrived = admit_arrivals(traffic, ahp.traffic, arrived, msg["t"],
+                                 state.k)
 
         # --- arrivals: per-worker server state, bits at the arrival round
         def update_B(_):
@@ -897,7 +917,7 @@ def make_flecs_async_sweep_step(cfg: FlecsConfig, local_grad: Callable,
         new_state = FlecsAsyncState(
             w_new, h_new, B_new, state.k + 1, bits_new, buf,
             reset(acc["g"]), reset(acc["Y"]), reset(acc["M"]),
-            reset(acc["B"]), reset(acc_n))
+            reset(acc["B"]), reset(acc_n), tstate)
         aux = {"g_tilde_norm": jnp.linalg.norm(means["g"]),
                "dir_norm": dir_norm,
                "n_active": jnp.sum(send_mask),

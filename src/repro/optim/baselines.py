@@ -41,17 +41,23 @@ sampled workers enter the server aggregate, update their local server-side
 state (DIANA shift h^i, FedNL Hessian H^i), and pay bits.
 
 Asynchronous buffered aggregation: ``make_diana_async_sweep_step`` /
-``make_gd_async_sweep_step`` give the first-order baselines the same
-FedBuff-style traced staleness axes as FLECS (:class:`DianaAsyncHParams` /
-:class:`GDAsyncHParams` wrap the sync hparams with traced tau and
-buffer_k); ``make_diana_async_step`` / ``make_gd_async_step`` are their
-concrete specializations.  Per-round delays come from
-``driver.sample_delays``, messages buffer in a bounded in-flight
-``MessageBuffer``, busy workers are excluded from sampling, bits are
-charged at the *arrival* round, and an aggregate step is applied once
+``make_gd_async_sweep_step`` / ``make_fednl_async_sweep_step`` give every
+baseline the same FedBuff-style traced staleness axes as FLECS
+(:class:`DianaAsyncHParams` / :class:`GDAsyncHParams` /
+:class:`FedNLAsyncHParams` wrap the sync hparams with traced tau and
+buffer_k); ``make_diana_async_step`` / ``make_gd_async_step`` /
+``make_fednl_async_step`` are their concrete specializations.  Per-round
+delays come from ``driver.sample_delays``, messages buffer in a bounded
+in-flight ``MessageBuffer``, busy workers are excluded from sampling, bits
+are charged at the *arrival* round, and an aggregate step is applied once
 ``buffer_k`` updates have buffered.  At ``tau=0`` (with ``buffer_k=1``, or
 ``buffer_k=n`` under full participation) they collapse to the synchronous
-steps trace-for-trace, so delay ablations compare methods on one engine.
+steps trace-for-trace, so delay ablations compare methods on one engine —
+with async FedNL the whole registry joins the staleness figures.  Every
+async maker also takes an optional ``repro.core.traffic.TrafficModel``
+threading arrival processes, per-client availability chains, and
+server-side admission through the same buffered path (``traffic=None``
+keeps the plain async engine bit-for-bit).
 
 Population scale: DIANA and GD additionally ship sharded
 (``make_*_sharded_sweep_step`` + ``*_sharded_state_specs`` for
@@ -87,6 +93,8 @@ from repro.core.driver import (ASYNC_SALT, COHORT_SALT, MessageBuffer,
                                fedbuff_accumulate, init_buffer, masked_mean,
                                resolve_participation, sample_delays,
                                validate_ps)
+from repro.core.traffic import (TrafficHParams, TrafficModel, TrafficState,
+                                admit_arrivals, traffic_send)
 
 
 def _grid_axes(*axes, ps=None):
@@ -306,10 +314,13 @@ def init_diana(w0, n_workers):
 
 class DianaAsyncHParams(NamedTuple):
     """Async sweep point: sync hparams + traced staleness axes (the same
-    shape as ``flecs.FlecsAsyncHParams``)."""
+    shape as ``flecs.FlecsAsyncHParams``).  ``traffic`` carries the traced
+    leaves of a ``repro.core.traffic`` model (rate tables, availability
+    transitions, admission caps) when one is threaded through the step."""
     hp: DianaHParams
     tau: jnp.ndarray
     buffer_k: jnp.ndarray
+    traffic: Optional[TrafficHParams] = None
 
 
 class DianaAsyncState(NamedTuple):
@@ -320,6 +331,7 @@ class DianaAsyncState(NamedTuple):
     buf: MessageBuffer           # in-flight {c [n,d], t [n]}
     acc_g: jnp.ndarray           # [d] FedBuff sum of arrived c^i + h^i
     acc_n: jnp.ndarray           # buffered-update count
+    traffic: Optional[TrafficState] = None   # availability chain state
 
 
 def init_diana_async(w0, n_workers, max_delay: int) -> DianaAsyncState:
@@ -334,7 +346,8 @@ def init_diana_async(w0, n_workers, max_delay: int) -> DianaAsyncState:
 
 
 def make_diana_async_sweep_step(cfg: DianaConfig, local_grad: Callable,
-                                delay_kind: str = "fixed", q: float = 0.5):
+                                delay_kind: str = "fixed", q: float = 0.5,
+                                traffic: Optional[TrafficModel] = None):
     """DIANA with FedBuff-style buffered aggregation, sweep-native: the
     delay bound tau, flush threshold buffer_k, step sizes, spec, and
     participation p are ALL traced — ``driver.run_async_sweep`` vmaps a
@@ -342,7 +355,10 @@ def make_diana_async_sweep_step(cfg: DianaConfig, local_grad: Callable,
     differences arrive late, bits are charged at the arrival round, shifts
     h^i update on arrival (busy workers are not re-sampled, so each c^i
     reconstructs against its compute-time shift), and the server steps once
-    ``buffer_k`` updates have buffered."""
+    ``buffer_k`` updates have buffered.  A ``traffic`` model layers arrival
+    processes, availability chains, and admission on the same path (only
+    admitted arrivals bill, update shifts, or enter the buffer);
+    ``traffic=None`` is the plain async engine, op-for-op."""
 
     def step(ahp: DianaAsyncHParams, state: DianaAsyncState, key):
         hp = ahp.hp
@@ -351,7 +367,14 @@ def make_diana_async_sweep_step(cfg: DianaConfig, local_grad: Callable,
         k_tau = jax.random.fold_in(key, ASYNC_SALT)
         mask = resolve_participation(k_p, n, cfg.participation,
                                      cfg.sampling, hp.p)
-        send_mask = mask * (1.0 - buffer_busy(state.buf))
+        base_delays = sample_delays(delay_kind, k_tau, n, ahp.tau, q)
+        if traffic is None:
+            send_mask = mask * (1.0 - buffer_busy(state.buf))
+            delays, tstate = base_delays, state.traffic
+        else:
+            send_mask, delays, tstate = traffic_send(
+                traffic, ahp.traffic, state.traffic, state.buf, mask, key,
+                state.k, ahp.tau, base_delays)
 
         def worker(i, hk, kq):
             g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
@@ -364,10 +387,10 @@ def make_diana_async_sweep_step(cfg: DianaConfig, local_grad: Callable,
                                        jax.random.split(k_q, n)),
             lambda _: jnp.zeros((n, d), jnp.float32), None)
         msgs = {"c": c, "t": jnp.full((n,), state.k, jnp.float32)}
-        buf = buffer_send(state.buf, msgs, send_mask,
-                          sample_delays(delay_kind, k_tau, n, ahp.tau, q),
-                          state.k)
+        buf = buffer_send(state.buf, msgs, send_mask, delays, state.k)
         buf, msg, arrived = buffer_receive(buf, state.k)
+        arrived = admit_arrivals(traffic, ahp.traffic, arrived, msg["t"],
+                                 state.k)
 
         h = state.h + hp.gamma * arrived[:, None] * msg["c"]
         bits = state.bits_per_node + arrived.astype(
@@ -379,7 +402,7 @@ def make_diana_async_sweep_step(cfg: DianaConfig, local_grad: Callable,
 
         w = jnp.where(flush, state.w - hp.alpha * g_tilde, state.w)
         new = DianaAsyncState(w, h, state.k + 1, bits, buf,
-                              reset(acc_g), reset(acc_n))
+                              reset(acc_g), reset(acc_n), tstate)
         return new, {"g_tilde_norm": jnp.linalg.norm(g_tilde),
                      "n_active": jnp.sum(send_mask),
                      "n_arrived": jnp.sum(arrived),
@@ -525,6 +548,156 @@ def init_fednl(w0, n_workers):
                       jnp.zeros((n_workers,), bits_dtype()))
 
 
+class FedNLAsyncHParams(NamedTuple):
+    """Async sweep point: sync hparams + traced staleness axes
+    (``traffic``: optional traced ``repro.core.traffic`` leaves)."""
+    hp: FedNLHParams
+    tau: jnp.ndarray
+    buffer_k: jnp.ndarray
+    traffic: Optional[TrafficHParams] = None
+
+
+class FedNLAsyncState(NamedTuple):
+    w: jnp.ndarray
+    H: jnp.ndarray               # [n, d, d] per-worker Hessian estimates
+    k: jnp.ndarray
+    bits_per_node: jnp.ndarray   # [n]
+    buf: MessageBuffer           # in-flight {g [n,d], D [n,d,d], t [n]}
+    acc_g: jnp.ndarray           # [d] FedBuff sum of arrived gradients
+    acc_H: jnp.ndarray           # [d, d] FedBuff sum of arrived H^i_{k+1}
+    acc_n: jnp.ndarray           # buffered-update count
+    traffic: Optional[TrafficState] = None   # availability chain state
+
+
+def init_fednl_async(w0, n_workers, max_delay: int) -> FedNLAsyncState:
+    base = init_fednl(w0, n_workers)
+    d = w0.shape[0]
+    proto = {"g": jnp.zeros((n_workers, d), jnp.float32),
+             "D": jnp.zeros((n_workers, d, d), jnp.float32),
+             "t": jnp.zeros((n_workers,), jnp.float32)}
+    return FedNLAsyncState(base.w, base.H, base.k, base.bits_per_node,
+                           init_buffer(proto, max_delay),
+                           jnp.zeros((d,), jnp.float32),
+                           jnp.zeros((d, d), jnp.float32),
+                           jnp.zeros((), jnp.float32))
+
+
+def make_fednl_async_sweep_step(cfg: FedNLConfig, local_grad: Callable,
+                                local_hessian: Callable,
+                                delay_kind: str = "fixed", q: float = 0.5,
+                                traffic: Optional[TrafficModel] = None):
+    """FedNL with FedBuff-style buffered aggregation — the compressed d×d
+    Hessian DIFFERENCES arrive late, which is what makes second-order
+    staleness interesting: a stale difference was compressed against the
+    sender's compute-time estimate H^i, so (exactly like the DIANA shift
+    algebra) a busy worker is not re-sampled until its message drains and
+    the server-side H^i learning applies strictly at the arrival round.
+    Bits — the uncompressed gradient plus the dimension-aware compressed
+    Hessian diff, FedNL's full wire price — are charged at *arrival*.
+    Arrived (gradient, updated-H) pairs accumulate in the FedBuff buffer;
+    on flush the server takes one regularized-Newton step from the
+    buffered means.  tau, buffer_k, alpha, spec, and p are all traced, so
+    a staleness grid is one ``driver.run_async_sweep`` program; at tau=0
+    (with buffer_k=n under full participation, or buffer_k=1 under
+    sampling) the step collapses to ``make_fednl_sweep_step`` bit-for-bit
+    — exact bit ledgers included (tests/test_async_aggregation.py).  A
+    ``traffic`` model layers arrivals/availability/admission on the same
+    path; ``traffic=None`` is the plain async engine, op-for-op."""
+
+    def step(ahp: FedNLAsyncHParams, state: FedNLAsyncState, key):
+        hp = ahp.hp
+        n, d = state.H.shape[:2]
+        k_g, k_c, k_p = jax.random.split(key, 3)            # == sync split
+        k_tau = jax.random.fold_in(key, ASYNC_SALT)
+        mask = resolve_participation(k_p, n, cfg.participation,
+                                     cfg.sampling, hp.p)
+        base_delays = sample_delays(delay_kind, k_tau, n, ahp.tau, q)
+        if traffic is None:
+            send_mask = mask * (1.0 - buffer_busy(state.buf))
+            delays, tstate = base_delays, state.traffic
+        else:
+            send_mask, delays, tstate = traffic_send(
+                traffic, ahp.traffic, state.traffic, state.buf, mask, key,
+                state.k, ahp.tau, base_delays)
+
+        def worker(i, Hk, kc):
+            g = local_grad(state.w, i, jax.random.fold_in(k_g, i))
+            Hi = local_hessian(state.w, i)
+            D = compress(hp.spec, kc, Hi - Hk, cfg.use_kernel)
+            return g, D
+
+        # skip the n oracle evaluations on rounds where everyone is busy
+        g_all, D_all = jax.lax.cond(
+            jnp.any(send_mask > 0),
+            lambda _: jax.vmap(worker)(jnp.arange(n), state.H,
+                                       jax.random.split(k_c, n)),
+            lambda _: (jnp.zeros((n, d), jnp.float32),
+                       jnp.zeros((n, d, d), jnp.float32)), None)
+        msgs = {"g": g_all, "D": D_all,
+                "t": jnp.full((n,), state.k, jnp.float32)}
+        buf = buffer_send(state.buf, msgs, send_mask, delays, state.k)
+        buf, msg, arrived = buffer_receive(buf, state.k)
+        arrived = admit_arrivals(traffic, ahp.traffic, arrived, msg["t"],
+                                 state.k)
+
+        # Hessian learning + billing strictly at the arrival round
+        H_new = state.H + arrived[:, None, None] * msg["D"]
+        bits = state.bits_per_node + arrived.astype(
+            state.bits_per_node.dtype) * (
+                d * 32.0 + spec_bits(hp.spec, d * d, cfg.use_kernel))
+        acc, acc_n, means, flush, reset = fedbuff_accumulate(
+            {"g": state.acc_g, "H": state.acc_H}, state.acc_n,
+            {"g": msg["g"], "H": H_new}, arrived, ahp.buffer_k)
+
+        def newton(_):
+            # positive-definite safeguard: H̄ + μI on the symmetric part —
+            # the synchronous direction, applied to the buffered means
+            Hs = 0.5 * (means["H"] + means["H"].T) + cfg.mu * jnp.eye(d)
+            lam, V = jnp.linalg.eigh(Hs)
+            lam = jnp.maximum(jnp.abs(lam), cfg.mu)
+            p = -(V @ ((V.T @ means["g"]) / lam))
+            return state.w + hp.alpha * p, jnp.linalg.norm(p)
+
+        # the eigh only runs (per scan step) on flush rounds
+        w, dir_norm = jax.lax.cond(
+            flush, newton,
+            lambda _: (state.w, jnp.zeros((), state.w.dtype)), None)
+        new = FedNLAsyncState(w, H_new, state.k + 1, bits, buf,
+                              reset(acc["g"]), reset(acc["H"]),
+                              reset(acc_n), tstate)
+        return new, {"g_tilde_norm": jnp.linalg.norm(means["g"]),
+                     "dir_norm": dir_norm,
+                     "n_active": jnp.sum(send_mask),
+                     "n_arrived": jnp.sum(arrived),
+                     "buffered": new.acc_n,
+                     "flushed": flush.astype(jnp.float32),
+                     "staleness_mean": applied_staleness(state.k, msg["t"],
+                                                         arrived),
+                     "bits_per_node": new.bits_per_node}
+
+    return step
+
+
+def make_fednl_async_step(alpha: float, compressor, local_grad: Callable,
+                          local_hessian: Callable, mu: float,
+                          schedule: StalenessSchedule, buffer_k: int,
+                          participation: float = 1.0,
+                          sampling: str = "bernoulli"):
+    """Legacy async entry point: the async sweep step specialized at the
+    concrete (cfg, schedule.tau, buffer_k) point."""
+    cfg = FedNLConfig(alpha, compressor, mu, participation, sampling)
+    ahp = FedNLAsyncHParams(fednl_hparams_from_config(cfg),
+                            jnp.int32(schedule.tau), jnp.float32(buffer_k))
+    sweep = make_fednl_async_sweep_step(cfg, local_grad, local_hessian,
+                                        delay_kind=schedule.kind,
+                                        q=schedule.q)
+
+    def step(state: FedNLAsyncState, key):
+        return sweep(ahp, state, key)
+
+    return step
+
+
 # ---------------------------------------------------------------------------
 # Distributed GD
 # ---------------------------------------------------------------------------
@@ -642,10 +815,12 @@ def init_gd(w0, n_workers):
 
 
 class GDAsyncHParams(NamedTuple):
-    """Async sweep point: sync hparams + traced staleness axes."""
+    """Async sweep point: sync hparams + traced staleness axes
+    (``traffic``: optional traced ``repro.core.traffic`` leaves)."""
     hp: GDHParams
     tau: jnp.ndarray
     buffer_k: jnp.ndarray
+    traffic: Optional[TrafficHParams] = None
 
 
 class GDAsyncState(NamedTuple):
@@ -655,6 +830,7 @@ class GDAsyncState(NamedTuple):
     buf: MessageBuffer           # in-flight {g [n,d], t [n]}
     acc_g: jnp.ndarray           # [d]
     acc_n: jnp.ndarray
+    traffic: Optional[TrafficState] = None   # availability chain state
 
 
 def init_gd_async(w0, n_workers, max_delay: int) -> GDAsyncState:
@@ -669,10 +845,12 @@ def init_gd_async(w0, n_workers, max_delay: int) -> GDAsyncState:
 
 def make_gd_async_sweep_step(cfg: GDConfig, local_grad: Callable,
                              n_workers: int, delay_kind: str = "fixed",
-                             q: float = 0.5):
+                             q: float = 0.5,
+                             traffic: Optional[TrafficModel] = None):
     """Uncompressed GD with buffered delayed gradients, sweep-native — the
     classic stale-gradient baseline with (tau, buffer_k, alpha, p) all
-    traced grid axes."""
+    traced grid axes (and, optionally, a ``repro.core.traffic`` model on
+    the buffered path; ``traffic=None`` is op-for-op the plain engine)."""
 
     def step(ahp: GDAsyncHParams, state: GDAsyncState, key):
         hp = ahp.hp
@@ -681,7 +859,14 @@ def make_gd_async_sweep_step(cfg: GDConfig, local_grad: Callable,
         k_tau = jax.random.fold_in(key, ASYNC_SALT)
         mask = resolve_participation(k_p, n_workers, cfg.participation,
                                      cfg.sampling, hp.p)
-        send_mask = mask * (1.0 - buffer_busy(state.buf))
+        base_delays = sample_delays(delay_kind, k_tau, n_workers, ahp.tau, q)
+        if traffic is None:
+            send_mask = mask * (1.0 - buffer_busy(state.buf))
+            delays, tstate = base_delays, state.traffic
+        else:
+            send_mask, delays, tstate = traffic_send(
+                traffic, ahp.traffic, state.traffic, state.buf, mask, key,
+                state.k, ahp.tau, base_delays)
         # skip the n gradient evaluations on rounds where everyone is busy
         g_all = jax.lax.cond(
             jnp.any(send_mask > 0),
@@ -691,10 +876,10 @@ def make_gd_async_sweep_step(cfg: GDConfig, local_grad: Callable,
                     jnp.arange(n_workers)),
             lambda _: jnp.zeros((n_workers, d), jnp.float32), None)
         msgs = {"g": g_all, "t": jnp.full((n_workers,), state.k, jnp.float32)}
-        buf = buffer_send(state.buf, msgs, send_mask,
-                          sample_delays(delay_kind, k_tau, n_workers,
-                                        ahp.tau, q), state.k)
+        buf = buffer_send(state.buf, msgs, send_mask, delays, state.k)
         buf, msg, arrived = buffer_receive(buf, state.k)
+        arrived = admit_arrivals(traffic, ahp.traffic, arrived, msg["t"],
+                                 state.k)
 
         bits = state.bits_per_node + arrived.astype(
             state.bits_per_node.dtype) * (d * 32.0)
@@ -703,7 +888,7 @@ def make_gd_async_sweep_step(cfg: GDConfig, local_grad: Callable,
 
         w = jnp.where(flush, state.w - hp.alpha * g, state.w)
         new = GDAsyncState(w, state.k + 1, bits, buf,
-                           reset(acc_g), reset(acc_n))
+                           reset(acc_g), reset(acc_n), tstate)
         return new, {"g_tilde_norm": jnp.linalg.norm(g),
                      "n_active": jnp.sum(send_mask),
                      "n_arrived": jnp.sum(arrived),

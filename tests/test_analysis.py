@@ -68,6 +68,19 @@ RULE_FIXTURES = {
                 return state, {"noise": jnp.sum(noise)}
             return step
         """),
+    # a traced step materializing a rate schedule from a Python loop
+    # (list comprehensions are not R1's loop statements, and jnp calls
+    # are not R2's host syncs — the fixture fires R8 alone)
+    "R8": (CORE, """
+        import jax.numpy as jnp
+
+        def make_demo_traffic_sweep_step(cfg):
+            def step(hp, state, key):
+                rate_table = jnp.stack(
+                    [hp.rate * (t % 24) for t in range(24)])
+                return state, {"r": jnp.sum(rate_table)}
+            return step
+        """),
     # a kernel launcher in a package with no ref.py oracle (the demo/
     # package does not exist on disk, so the pairing probe fails)
     "R6": ("src/repro/kernels/demo/demo.py", """
@@ -257,6 +270,28 @@ def test_r7_scope_is_cohort_only_and_split_exempt():
             return jnp.zeros((n_total,), bits_dtype())
         """)
     assert lint_source(init, path) == []
+
+
+def test_r8_scope_is_traffic_named_and_trace_time_only():
+    """R8 leaves factory build-time schedule construction alone (that is
+    exactly where `traffic_hparams` builds tables), and ignores literal
+    arrays in traced steps that carry no traffic-named identifier."""
+    path, src = RULE_FIXTURES["R8"]
+    build_time = textwrap.dedent("""
+        import jax.numpy as jnp
+
+        def make_demo_traffic_sweep_step(cfg):
+            rate_table = jnp.stack(
+                [cfg.rate * (t % 24) for t in range(24)])
+
+            def step(hp, state, key):
+                return state, {"r": rate_table[state % 24]}
+            return step
+        """)
+    assert lint_source(build_time, path) == []
+    unrelated = textwrap.dedent(src).replace("rate_table", "sign_mask") \
+                                    .replace("hp.rate", "hp.alpha")
+    assert lint_source(unrelated, path) == []
 
 
 def test_r5_snapshot_matches_tree_and_detects_drift():

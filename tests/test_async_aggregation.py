@@ -5,7 +5,8 @@ Covers the async engine's hard contracts:
     geometric) stay in [0, tau] and match their distributions;
   * ``driver.MessageBuffer`` routes each message to its arrival round and
     flags in-flight workers busy;
-  * at tau=0 the async steps (FLECS, DIANA, GD) reproduce the synchronous
+  * at tau=0 the async steps (FLECS, DIANA, FedNL, GD) reproduce the
+    synchronous
     engine's traces exactly — allclose on F, exact on bits_per_node — for
     buffer_k=n at full participation AND buffer_k=1 under client sampling;
   * communication bits are charged at the *arrival* round, never at the
@@ -25,14 +26,19 @@ from repro.core.flecs import (FlecsConfig, bits_per_round, init_async_state,
                               init_state, make_flecs_async_step,
                               make_flecs_step)
 from repro.data.logreg import make_problem
-from repro.optim.baselines import (init_diana, init_diana_async, init_gd,
-                                   init_gd_async, make_diana_async_step,
-                                   make_diana_step, make_gd_async_step,
-                                   make_gd_step)
+from repro.optim.baselines import (init_diana, init_diana_async, init_fednl,
+                                   init_fednl_async, init_gd, init_gd_async,
+                                   make_diana_async_step, make_diana_step,
+                                   make_fednl_async_step, make_fednl_step,
+                                   make_gd_async_step, make_gd_step)
 
 PROB = make_problem(d=24, n_workers=4, r=24, mu=1e-3, seed=5)
 LG, LH = PROB.make_oracles(batch=0)
 N, D = PROB.n_workers, PROB.d
+
+
+def _local_hessian(w, i):
+    return jax.hessian(lambda ww: PROB.local_loss(ww, i))(w)
 
 
 # ---------------------------------------------------------------------------
@@ -183,6 +189,25 @@ def test_tau0_diana_gd_match_sync_engine():
         make_gd_async_step(1.0, LG, N, sched, 1,
                            participation=0.5, sampling="choice"),
         init_gd_async(jnp.zeros(D), N, 0))
+
+
+@pytest.mark.parametrize("fednl_kw,K", [
+    (dict(), None),                                          # K = n, full
+    (dict(participation=0.5, sampling="choice"), 1),
+    (dict(participation=0.3, sampling="bernoulli"), 1),
+])
+def test_tau0_fednl_matches_sync_engine(fednl_kw, K):
+    """Async FedNL (compressed Hessian diffs through the FedBuff buffer)
+    collapses bit-for-bit onto the synchronous learned-Hessian path at
+    tau=0 — the last method to close the five-method async matrix."""
+    sched = StalenessSchedule("fixed", tau=0)
+    _compare_sync_async(
+        make_fednl_step(1.0, "topk0.25", LG, _local_hessian, PROB.mu,
+                        **fednl_kw),
+        init_fednl(jnp.zeros(D), N),
+        make_fednl_async_step(1.0, "topk0.25", LG, _local_hessian, PROB.mu,
+                              sched, N if K is None else K, **fednl_kw),
+        init_fednl_async(jnp.zeros(D), N, sched.max_delay))
 
 
 # ---------------------------------------------------------------------------

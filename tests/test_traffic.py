@@ -1,0 +1,275 @@
+"""Traffic simulation (repro.core.traffic): arrival processes,
+availability chains, and cohort admission on the async engines.
+
+Pins the subsystem's hard contracts:
+  * thinned/replayed delay draws stay in [0, tau] and match their
+    distributions (Poisson thinning, diurnal phase, trace replay);
+  * the availability Markov chain's empirical occupancy matches the
+    analytic stationary distribution;
+  * a staleness cutoff of 0 at tau=0 is bitwise transparent — the async
+    plan still collapses onto the synchronous engine exactly (the same
+    contract as the plain tau=0 collapse);
+  * at tau>0 a 0 cutoff discards EVERYTHING: sends happen, but the bit
+    ledgers stay exactly zero and the iterate never moves (unbilled
+    discard, the tau=infinity-discard edge);
+  * max_in_flight bounds the per-round send count;
+  * a five-method traffic-profile comparison (async FedNL included) runs
+    via run_plan as ONE compiled program;
+  * construction-time validation (bad kinds, rates, matrices, degenerate
+    geometric q) fails loudly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.api import ExperimentPlan, MethodRun, run_plan
+from repro.core.driver import (StalenessSchedule, init_buffer,
+                               sample_delays)
+from repro.core.traffic import (AdmissionPolicy, ArrivalSchedule,
+                                AvailabilityModel, TrafficModel,
+                                availability_step, init_traffic_state,
+                                replay_delays, stationary_distribution,
+                                thinned_delays, traffic_hparams,
+                                traffic_send)
+from repro.data.logreg import make_problem
+
+PROB = make_problem(d=12, n_workers=4, r=12, mu=1e-3, seed=9)
+N, D = PROB.n_workers, PROB.d
+ALL_METHODS = ("flecs", "flecs_cgd", "diana", "fednl", "gd")
+
+
+# ---------------------------------------------------------------------------
+# Construction-time validation
+# ---------------------------------------------------------------------------
+
+def test_arrival_schedule_validation():
+    ArrivalSchedule("poisson", rates=(0.5,))                  # ok
+    ArrivalSchedule("diurnal", rates=(0.9, 0.2, 0.6))         # ok
+    with pytest.raises(ValueError):
+        ArrivalSchedule("exponential")
+    with pytest.raises(ValueError):
+        ArrivalSchedule("poisson", rates=(0.5, 0.9))          # 1 rate only
+    with pytest.raises(ValueError):
+        ArrivalSchedule("diurnal", rates=())
+    with pytest.raises(ValueError):
+        ArrivalSchedule("diurnal", rates=(0.5, 0.0))          # (0, 1]
+    with pytest.raises(ValueError):
+        ArrivalSchedule("diurnal", rates=(0.5, 1.5))
+    with pytest.raises(ValueError):
+        ArrivalSchedule("trace")                              # needs trace
+    with pytest.raises(ValueError):
+        ArrivalSchedule("trace", trace=np.zeros((3,)))        # [T, n] only
+    with pytest.raises(ValueError):
+        ArrivalSchedule("trace", trace=-np.ones((2, 3)))
+    ArrivalSchedule("trace", trace=np.ones((2, 3), np.int32))  # ok
+
+
+def test_availability_and_admission_validation():
+    with pytest.raises(ValueError):
+        AvailabilityModel(transition=((1.0,),))               # >= 2 states
+    with pytest.raises(ValueError):
+        AvailabilityModel(transition=((0.5, 0.4), (0.5, 0.5)))  # rows sum 1
+    with pytest.raises(ValueError):
+        AvailabilityModel(transition=((1.5, -0.5), (0.5, 0.5)))
+    with pytest.raises(ValueError):
+        AdmissionPolicy(staleness_cutoff=-1.0)
+    with pytest.raises(ValueError):
+        AdmissionPolicy(max_in_flight=-2.0)
+
+
+def test_degenerate_geometric_q_guard():
+    """Satellite: q<=0 / q>=1 make log(q) blow up and every delay NaN —
+    sample_delays must fail loudly instead."""
+    key = jax.random.key(0)
+    for q in (0.0, -0.5, 1.0, 1.5):
+        with pytest.raises(ValueError, match="geometric q"):
+            sample_delays("geometric", key, 4, jnp.int32(3), q)
+    # the healthy range still samples
+    d = sample_delays("geometric", key, 1000, jnp.int32(3), 0.5)
+    assert int(d.min()) >= 0 and int(d.max()) <= 3
+
+
+def test_traffic_hparams_defaults():
+    thp = traffic_hparams(TrafficModel())
+    np.testing.assert_array_equal(np.asarray(thp.rate_table), [1.0])
+    np.testing.assert_array_equal(np.asarray(thp.avail_transition),
+                                  np.eye(3))
+    assert np.isinf(float(thp.staleness_cutoff))
+    assert np.isinf(float(thp.max_in_flight))
+
+
+def test_traffic_send_guards():
+    model = TrafficModel(availability=AvailabilityModel())
+    buf = init_buffer({"x": jnp.zeros((N,))}, max_delay=2)
+    args = (buf, jnp.ones((N,)), jax.random.key(0), jnp.int32(0),
+            jnp.int32(2), jnp.zeros((N,), jnp.int32))
+    with pytest.raises(ValueError, match="traced leaves"):
+        traffic_send(model, None, init_traffic_state(N), *args)
+    with pytest.raises(ValueError, match="chain state"):
+        traffic_send(model, traffic_hparams(model), None, *args)
+
+
+# ---------------------------------------------------------------------------
+# Arrival draws
+# ---------------------------------------------------------------------------
+
+def test_thinned_delays_rate_one_is_immediate():
+    """rate 1.0 => every message completes at offset 0, any phase."""
+    table = jnp.asarray([1.0, 1.0], jnp.float32)
+    for k in range(4):
+        d = thinned_delays(table, jax.random.key(k), 16, jnp.int32(k),
+                           jnp.int32(3), slots=4)
+        np.testing.assert_array_equal(np.asarray(d), 0)
+
+
+def test_thinned_delays_match_geometric_distribution():
+    """A single-phase (poisson) rate r is a geometric service time:
+    P(delay=t) = (1-r)^t r for t < tau, remainder lumped at the tau cap."""
+    r = 0.5
+    d = np.asarray(thinned_delays(jnp.asarray([r], jnp.float32),
+                                  jax.random.key(1), 40000, jnp.int32(0),
+                                  jnp.int32(3), slots=4))
+    assert d.min() >= 0 and d.max() <= 3
+    counts = np.bincount(d, minlength=4) / 40000
+    np.testing.assert_allclose(counts[:3], [0.5, 0.25, 0.125], atol=0.01)
+
+
+def test_thinned_delays_follow_diurnal_phase():
+    """Phase-dependent completion: a rush-hour (high-rate) phase right
+    after a lull means delay mass concentrates at the phase boundary."""
+    table = jnp.asarray([0.01, 1.0], jnp.float32)
+    # sent at k=0: offset 0 hits the lull (rate .01), offset 1 the rush
+    d0 = np.asarray(thinned_delays(table, jax.random.key(2), 4000,
+                                   jnp.int32(0), jnp.int32(3), slots=4))
+    assert (d0 == 1).mean() > 0.95
+    # sent at k=1: offset 0 IS the rush phase — immediate completion
+    d1 = np.asarray(thinned_delays(table, jax.random.key(3), 4000,
+                                   jnp.int32(1), jnp.int32(3), slots=4))
+    assert (d1 == 0).mean() > 0.95
+
+
+def test_replay_delays_cycle_and_clip():
+    trace = np.asarray([[0, 1], [2, 3], [4, 5]])
+    np.testing.assert_array_equal(
+        np.asarray(replay_delays(trace, jnp.int32(4), jnp.int32(10))),
+        [2, 3])                                         # row 4 % 3 = 1
+    np.testing.assert_array_equal(
+        np.asarray(replay_delays(trace, jnp.int32(2), jnp.int32(4))),
+        [4, 4])                                         # clipped to tau
+
+
+# ---------------------------------------------------------------------------
+# Availability chain: empirical occupancy == analytic stationary law
+# ---------------------------------------------------------------------------
+
+def test_stationary_distribution_is_a_fixed_point():
+    t = ((0.85, 0.10, 0.05), (0.60, 0.40, 0.00), (0.10, 0.00, 0.90))
+    pi = stationary_distribution(t)
+    assert pi.shape == (3,) and abs(pi.sum() - 1.0) < 1e-9
+    np.testing.assert_allclose(pi @ np.asarray(t), pi, atol=1e-9)
+
+
+def test_availability_occupancy_matches_stationary_law():
+    """Satellite: run the traced chain under lax.scan for thousands of
+    rounds over many workers; time-averaged occupancy of each state must
+    match the analytic stationary distribution."""
+    t = ((0.8, 0.15, 0.05), (0.6, 0.4, 0.0), (0.3, 0.0, 0.7))
+    trans = jnp.asarray(t, jnp.float32)
+    n, rounds, burn = 64, 4000, 500
+
+    def chain(avail, key):
+        nxt = availability_step(trans, avail, key)
+        return nxt, nxt
+
+    keys = jax.random.split(jax.random.key(7), rounds)
+    _, path = jax.lax.scan(chain, jnp.zeros((n,), jnp.int32), keys)
+    states = np.asarray(path[burn:])                    # [rounds-burn, n]
+    occupancy = np.bincount(states.ravel(), minlength=3) / states.size
+    np.testing.assert_allclose(occupancy, stationary_distribution(t),
+                               atol=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Admission contracts on the plan path
+# ---------------------------------------------------------------------------
+
+def _async_plan(method, tau, traffic, iters=8, **kw):
+    return ExperimentPlan(
+        problem=PROB, runs=(MethodRun(method),), iters=iters, seed=3,
+        staleness=StalenessSchedule("fixed", tau=tau),
+        buffer_k=float(N), traffic=traffic, **kw)
+
+
+@pytest.mark.parametrize("method", ["flecs_cgd", "fednl"])
+def test_cutoff_zero_at_tau_zero_collapses_to_sync(method):
+    """Satellite: staleness_cutoff=0 admits exactly the age-0 arrivals,
+    so at tau=0 the whole traffic layer is bitwise transparent — same
+    contract as the plain tau=0 collapse."""
+    traffic = TrafficModel(admission=AdmissionPolicy(staleness_cutoff=0.0))
+    res_a = run_plan(_async_plan(method, tau=0, traffic=traffic))
+    res_s = run_plan(ExperimentPlan(problem=PROB,
+                                    runs=(MethodRun(method),),
+                                    iters=8, seed=3))
+    np.testing.assert_array_equal(
+        np.asarray(res_a.traces[method]["bits_per_node"]),
+        np.asarray(res_s.traces[method]["bits_per_node"]))
+    np.testing.assert_array_equal(np.asarray(res_a.states[method].w),
+                                  np.asarray(res_s.states[method].w))
+
+
+def test_cutoff_zero_at_positive_tau_discards_everything_unbilled():
+    """The tau=infinity-discard edge: every arrival is 2 rounds old, the
+    0 cutoff rejects them all — sends DO happen, but nothing is billed
+    and the iterate never moves."""
+    traffic = TrafficModel(admission=AdmissionPolicy(staleness_cutoff=0.0))
+    res = run_plan(_async_plan("flecs_cgd", tau=2, traffic=traffic))
+    tr = res.traces["flecs_cgd"]
+    assert float(np.asarray(tr["n_active"]).sum()) > 0      # sends happened
+    np.testing.assert_array_equal(np.asarray(tr["bits_per_node"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(tr["n_arrived"]), 0.0)
+    np.testing.assert_array_equal(np.asarray(res.states["flecs_cgd"].w),
+                                  np.zeros((1, D), np.float32))
+
+
+def test_max_in_flight_bounds_per_round_sends():
+    traffic = TrafficModel(
+        arrival=ArrivalSchedule("poisson", rates=(0.7,)),
+        admission=AdmissionPolicy(max_in_flight=2.0))
+    res = run_plan(_async_plan("diana", tau=3, traffic=traffic, iters=20))
+    n_active = np.asarray(res.traces["diana"]["n_active"])
+    assert n_active.max() <= 2.0
+    assert n_active.sum() > 0
+
+
+def test_traffic_requires_the_buffered_path():
+    """plan.traffic without plan.staleness fails at validation — the
+    traffic surfaces live on the buffered engine."""
+    plan = ExperimentPlan(problem=PROB, runs=(MethodRun("diana"),),
+                          iters=2, traffic=TrafficModel())
+    with pytest.raises(ValueError, match="staleness"):
+        run_plan(plan)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: five methods x full traffic model, ONE compiled program
+# ---------------------------------------------------------------------------
+
+def test_five_method_traffic_plan_is_one_compile():
+    traffic = TrafficModel(
+        arrival=ArrivalSchedule("diurnal", rates=(0.9, 0.3)),
+        availability=AvailabilityModel(),
+        admission=AdmissionPolicy(staleness_cutoff=3.0, max_in_flight=3.0))
+    plan = ExperimentPlan(
+        problem=PROB, runs=tuple(MethodRun(m) for m in ALL_METHODS),
+        iters=6, seed=0, staleness=StalenessSchedule("fixed", tau=4),
+        buffer_k=2.0, traffic=traffic)
+    api.reset_plan_stats()
+    res = run_plan(plan)
+    assert api.plan_compiles() == 1
+    for m in ALL_METHODS:
+        F = np.asarray(res.traces[m]["F"])
+        assert F.shape == (1, 6) and np.all(np.isfinite(F)), m
+        # the in-flight cap binds every method's send side
+        assert np.asarray(res.traces[m]["n_active"]).max() <= 3.0, m
