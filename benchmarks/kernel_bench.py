@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.compressors import compress, get_compressor, spec_from_name
+from repro.core.compressors import Compressor, compress, make_spec
 from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
 from repro.data.logreg import make_problem
 
@@ -61,7 +61,7 @@ def run(csv_rows: list, *, toy: bool = False, iters: int = 20):
     for n in ((1 << 10,) if toy else (1 << 14, 1 << 18)):
         x = jnp.asarray(rng.normal(size=n), jnp.float32)
         for name in ("dither64", "natural", "topk0.1"):
-            Q = get_compressor(name)
+            Q = Compressor(name, make_spec(name))
             f = jax.jit(lambda k, x, Q=Q: Q.compress(k, x))
             us = _time(f, jax.random.key(0), x, iters=iters)
             # dimension-aware wire accounting: top-k pays per kept value
@@ -77,7 +77,7 @@ def run(csv_rows: list, *, toy: bool = False, iters: int = 20):
     for n in ((1 << 10,) if toy else (1 << 12, 1 << 16)):
         x = jnp.asarray(rng.normal(size=n), jnp.float32)
         for name in ("dither64", "topk0.1"):
-            spec = spec_from_name(name)
+            spec = make_spec(name)
             for impl, flag in (("jnp", False), ("kernel", True)):
                 f = jax.jit(lambda k, x, spec=spec, flag=flag:
                             compress(spec, k, x, flag))

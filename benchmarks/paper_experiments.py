@@ -304,6 +304,48 @@ def participation_ablation(prob, iters=300):
             for g, p in enumerate(PARTICIPATION_PS)]
 
 
+SKETCH_FAMILY_NAMES = ("dither64", "topk0.25", "count_sketch64",
+                       "minmax0.5")
+
+
+def sketch_families_plan(prob, iters=200) -> ExperimentPlan:
+    """Beyond-paper: all four non-trivial compressor families — random
+    dithering, top-k selection, count-sketch, min-max sampling — stacked
+    on ONE traced grid axis over FLECS-CGD gradients
+    (``compressors.stack_specs``), so the whole family comparison is a
+    single compiled program."""
+    hp = get_method("flecs_cgd").grid(
+        grad_specs=stack_specs(*SKETCH_FAMILY_NAMES))
+    return ExperimentPlan(
+        problem=prob,
+        runs=(MethodRun("flecs_cgd", cfg=FlecsConfig(m=2), hparams=hp,
+                        label="families"),),
+        iters=iters)
+
+
+def sketch_families(prob, iters=200):
+    """Objective vs wire price vs omega across the family axis.  The
+    ``round_bits`` / ``omega`` columns are deterministic wire arithmetic
+    (exact under the drift gate); F / grad_sq / Mbits_mean are
+    PRNG/BLAS-dependent (tolerant keys)."""
+    from repro.core.compressors import spec_omega
+    from repro.core.flecs import hparams_round_bits
+    res = assert_one_compile(
+        lambda: run_plan(sketch_families_plan(prob, iters)))
+    hp = res.hparams["families"]
+    st = res.states["families"]
+    tr = res.traces["families"]
+    price = hparams_round_bits(FlecsConfig(m=2), hp, prob.d)
+    omg = jax.vmap(lambda sp: spec_omega(sp, prob.d))(hp.grad_spec)
+    return [{"family": name,
+             "round_bits": float(price[g]),
+             "omega": float(omg[g]),
+             "F": float(tr["F"][g, -1]),
+             "grad_sq": float(tr["grad_sq"][g, -1]),
+             "Mbits_mean": float(jnp.mean(st.bits_per_node[g])) / 1e6}
+            for g, name in enumerate(SKETCH_FAMILY_NAMES)]
+
+
 BUDGET_GRID_MULTS = (2.0, 8.0, 32.0)
 
 
@@ -510,7 +552,18 @@ def run_plans(prob, csv_rows: list, iters=200):
               f"bits/node={r['bits_per_node'] / 1e3:8.1f}kb")
         csv_rows.append((f"budget_fair/{r['method']}@{r['budget']:.0f}", 0.0,
                          f"F={r['F']:.5f};rounds={r['rounds']}"))
-    return res1, part, bud
+
+    fam = sketch_families(prob, iters=iters)
+    json.dump(fam, open(OUT / "sketch_families.json", "w"), indent=1)
+    print("\n=== Compressor families: dither / topk / count-sketch / "
+          "minmax as ONE traced axis ===")
+    for r in fam:
+        print(f"  {r['family']:14s} omega={r['omega']:8.2f} "
+              f"round_bits={r['round_bits']:8.0f} F={r['F']:.5f} "
+              f"Mbits/node(mean)={r['Mbits_mean']:.3f}")
+        csv_rows.append((f"families/{r['family']}", 0.0,
+                         f"F={r['F']:.5f};bits={r['round_bits']:.0f}"))
+    return res1, part, bud, fam
 
 
 def run_grids(prob, csv_rows: list, iters_sync=200, iters_async=600):
@@ -543,7 +596,7 @@ def run(csv_rows: list):
     OUT.mkdir(exist_ok=True)
     prob = make_problem(d=123, n_workers=20, r=64, mu=1e-3, seed=0)
 
-    res1, part, _ = run_plans(prob, csv_rows, iters=300)
+    res1, part, _, _ = run_plans(prob, csv_rows, iters=300)
     # headline check: for the same iterate count CGD ships fewer bits
     f_cgd = res1["FLECS-CGD-m1"][-1]
     f_fl = res1["FLECS-m1"][-1]

@@ -61,7 +61,7 @@ import jax
 
 from repro.core import api
 from repro.core.api import ExperimentPlan, MethodRun, run_plan
-from repro.core.compressors import spec_from_name
+from repro.core.compressors import make_spec
 from repro.core.driver import StalenessSchedule, damped_alpha
 from repro.core.flecs import FlecsConfig, FlecsHParams
 from repro.core.traffic import ArrivalSchedule, TrafficModel
@@ -91,7 +91,7 @@ def build_runs(args, prob, ps, alphas):
     def bcast_spec(name):
         return jax.tree.map(
             lambda a: jnp.broadcast_to(jnp.asarray(a), (G,)),
-            spec_from_name(name))
+            make_spec(name))
 
     names = METHOD_ORDER if args.method == "all" else (args.method,)
     budgeted = args.bit_budget > 0

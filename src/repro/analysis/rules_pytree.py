@@ -1,6 +1,8 @@
 """R5 — hparam NamedTuples may only grow trailing defaulted slots.
 
-Every ``*HParams`` NamedTuple is a pytree whose leaf ORDER is the public
+Every ``*HParams`` NamedTuple — plus the named wire-contract pytrees in
+``EXTRA_TRACKED`` (``CompressorSpec``/``SketchParams``, which ride on
+every sweep grid and golden) — is a pytree whose leaf ORDER is the public
 contract: sweep grids are stacked positionally (``init_diana(...)`` style
 constructors pass fields by position), checkpoints/goldens store leaves in
 field order, and ``sweep_program`` vmaps over the stacked axes by
@@ -31,6 +33,15 @@ SNAPSHOT_FILE = "hparam_fields.json"
 #: Class-name suffix that marks a NamedTuple as a tracked hparam pytree.
 HPARAM_SUFFIX = "HParams"
 
+#: NamedTuples tracked by exact name: wire-contract pytrees whose leaf
+#: order is public API even though they are not ``*HParams`` (the
+#: compressor spec rides on every sweep grid and golden).
+EXTRA_TRACKED = ("CompressorSpec", "SketchParams")
+
+
+def _tracked(name: str) -> bool:
+    return name.endswith(HPARAM_SUFFIX) or name in EXTRA_TRACKED
+
 
 def snapshot_path() -> Path:
     return Path(__file__).resolve().parent / SNAPSHOT_FILE
@@ -55,7 +66,7 @@ def hparam_classes(tree: ast.Module) -> Dict[str, List[Tuple[str, bool]]]:
     for node in tree.body:
         if not isinstance(node, ast.ClassDef):
             continue
-        if not node.name.endswith(HPARAM_SUFFIX):
+        if not _tracked(node.name):
             continue
         bases = {b.attr if isinstance(b, ast.Attribute) else getattr(
             b, "id", None) for b in node.bases}

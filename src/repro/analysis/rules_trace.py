@@ -28,7 +28,7 @@ R2 forbids host synchronization on traced values inside the traced set:
 ``np.asarray``/``np.array`` all force a device sync (or a
 ConcretizationTypeError under jit) — a single one inside a scan body
 serializes the whole program.  Constructor/config paths
-(``spec_from_name`` and friends) are outside the traced set and stay
+(``make_spec`` and friends) are outside the traced set and stay
 allowed.
 """
 from __future__ import annotations

@@ -2,8 +2,9 @@
 
 Declarative method registry + experiment plans (one compile per figure):
     from repro.core.api import ExperimentPlan, MethodRun, get_method, run_plan
-Traced compressor algebra (specs as vmappable sweep axes):
-    from repro.core.compressors import CompressorSpec, compress, spec_bits
+Traced compressor algebra (specs as vmappable sweep axes; make_spec is
+the one constructor — names, specs, and Compressors all normalize there):
+    from repro.core.compressors import make_spec, compress, spec_bits
 Exact mode (paper-scale problems):
     from repro.core.flecs import FlecsConfig, init_state, make_flecs_step
 Experiment engine (lax.scan runs, client sampling, vmapped sweeps):
@@ -17,11 +18,18 @@ NOTE: ``repro.core.api`` is intentionally NOT imported here — it pulls
 ``repro.optim.baselines`` (the whole baseline suite) into every core
 import; import it explicitly.
 """
-from repro.core.compressors import (Compressor, CompressorSpec, compress,
-                                    get_compressor, psum_level_cap,
-                                    spec_bits, spec_bits_many,
+from repro.core.compressors import (FAMILY_COUNT_SKETCH, FAMILY_DITHER,
+                                    FAMILY_IDENTITY, FAMILY_MINMAX,
+                                    FAMILY_NATURAL, FAMILY_TOPK,
+                                    Compressor, CompressorSpec, compress,
+                                    count_sketch_decode, count_sketch_encode,
+                                    count_sketch_spec, dither_spec,
+                                    fill_params, get_compressor,
+                                    identity_spec, make_spec, minmax_spec,
+                                    natural_spec, psum_level_cap,
+                                    SketchParams, spec_bits, spec_bits_many,
                                     spec_commutes_with_sum, spec_from_name,
-                                    spec_omega, stack_specs)
+                                    spec_omega, stack_specs, topk_spec)
 from repro.core.driver import (COHORT_SALT, cohort_indices, damped_alpha,
                                freeze_on_bit_budget, hparams_bit_budget,
                                iters_for_bit_budget, participation_mask,
@@ -51,10 +59,15 @@ from repro.core.traffic import (ARRIVAL_SALT, AVAIL_SALT, AVAILABLE, BUSY,
                                 stationary_distribution, thinned_delays,
                                 traffic_hparams, traffic_send)
 
-__all__ = ["Compressor", "CompressorSpec", "compress", "get_compressor",
+__all__ = ["Compressor", "CompressorSpec", "FAMILY_COUNT_SKETCH",
+           "FAMILY_DITHER", "FAMILY_IDENTITY", "FAMILY_MINMAX",
+           "FAMILY_NATURAL", "FAMILY_TOPK", "SketchParams", "compress",
+           "count_sketch_decode", "count_sketch_encode", "count_sketch_spec",
+           "dither_spec", "fill_params", "get_compressor", "identity_spec",
+           "make_spec", "minmax_spec", "natural_spec",
            "psum_level_cap", "spec_bits", "spec_bits_many",
            "spec_commutes_with_sum", "spec_from_name", "spec_omega",
-           "stack_specs",
+           "stack_specs", "topk_spec",
            "ARRIVAL_SALT", "AVAILABLE", "AVAIL_SALT", "AdmissionPolicy",
            "ArrivalSchedule", "AvailabilityModel", "BUSY",
            "COHORT_SALT", "DROPPED", "EDGE_SALT", "FlecsAsyncHParams",

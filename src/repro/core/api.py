@@ -87,7 +87,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import flecs
-from repro.core.compressors import spec_from_name
+from repro.core.compressors import make_spec
 from repro.core.driver import (StalenessSchedule, bits_dtype,
                                hparams_bit_budget, iters_for_bit_budget,
                                sweep_keys, sweep_program)
@@ -224,7 +224,7 @@ def _flecs_spec(name: str, default_grad: str) -> MethodSpec:
         THIS method's own — ``get_method("flecs").grid(...)`` sweeps with
         identity gradients, not FLECS-CGD's dither64."""
         if grad_levels is None and grad_specs is None:
-            grad_specs = spec_from_name(default_grad)
+            grad_specs = make_spec(default_grad)
         return _flecs_grid(
             alphas, gammas, betas,
             grad_levels if grad_levels is not None else (64.0,),

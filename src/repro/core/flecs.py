@@ -74,8 +74,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.compressors import (CompressorSpec, compress, dither_spec,
-                                    spec_bits, spec_bits_many,
-                                    spec_from_name)
+                                    make_spec, spec_bits, spec_bits_many)
 from repro.core.directions import (fedsonia_direction,
                                    truncated_inverse_direction,
                                    truncated_inverse_direction_floored)
@@ -181,11 +180,10 @@ def hparams_from_config(cfg: FlecsConfig) -> FlecsHParams:
     specializes the sweep step at."""
     return FlecsHParams(jnp.float32(cfg.alpha), jnp.float32(cfg.gamma),
                         jnp.float32(cfg.beta),
-                        spec_from_name(cfg.grad_compressor),
-                        spec_from_name(cfg.hess_compressor),
+                        make_spec(cfg.grad_compressor),
+                        make_spec(cfg.hess_compressor),
                         edge_spec=(None if cfg.hierarchy is None else
-                                   spec_from_name(
-                                       cfg.hierarchy.edge_compressor)))
+                                   make_spec(cfg.hierarchy.edge_compressor)))
 
 
 def hparam_grid(alphas, gammas, grad_levels, betas=(1.0,),
@@ -264,8 +262,8 @@ def _round_bits(grad_spec: CompressorSpec, hess_spec: CompressorSpec,
 
 def bits_per_round(cfg: FlecsConfig, d: int) -> float:
     """Deterministic per-participating-worker uplink bits of one round."""
-    return float(_round_bits(spec_from_name(cfg.grad_compressor),
-                             spec_from_name(cfg.hess_compressor), d, cfg.m,
+    return float(_round_bits(make_spec(cfg.grad_compressor),
+                             make_spec(cfg.hess_compressor), d, cfg.m,
                              cfg.use_kernel))
 
 

@@ -31,9 +31,11 @@ ships nothing and is charged nothing that round.
 
 When does the two-tier combine equal the flat one?  Exactly when the edge
 compressor commutes with summation (``compressors.spec_commutes_with_sum``):
-identity trivially, and linear sketches (count-sketch, the planned FetchSGD
-family) by linearity.  Dithering is unbiased but NOT linear (rounding), and
-top-k is neither — re-compressing partial sums changes the estimator, which
+identity trivially, and the count-sketch family by linearity of its encode
+(``_combine_compressed`` sums accumulators in sketch domain and decodes
+once at the root — see its docstring).  Dithering is unbiased but NOT
+linear (rounding), and top-k / min-max sampling are data-dependent
+selections — re-compressing partial sums changes the estimator, which
 is the omega/bits trade-off the edge-spec sweep axis explores.  Note this
 is also why the sharded engine (``run_sharded_sweep``) reduces float
 aggregates by all_gather + replicated math rather than ``lax.psum``: psum
@@ -52,7 +54,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import CompressorSpec, compress, spec_bits
+from repro.core.compressors import (FAMILY_COUNT_SKETCH, CompressorSpec,
+                                    compress, count_sketch_decode,
+                                    count_sketch_encode, fill_params,
+                                    spec_bits)
 from repro.core.driver import bits_dtype
 
 # Domain separator for the edge-tier compressor key stream: folded into the
@@ -124,13 +129,39 @@ def charge_edges(edge_bits: jnp.ndarray, edge_active: jnp.ndarray, price):
 def _combine_compressed(edge_spec: CompressorSpec, key, partial,
                         edge_active, use_kernel: bool = False):
     """Shared top tier: re-compress per-edge partial sums [E, ...], zero
-    idle edges (nothing was transmitted), and sum into the server total."""
+    idle edges (nothing was transmitted), and sum into the server total.
+
+    Sketch-domain fast path: when the edge family is count-sketch (a
+    traced predicate — ``lax.cond``, so a stacked family axis may mix
+    sketch and non-sketch grid points), every edge encodes its partial
+    with the SAME round key (shared key == shared hash functions == the
+    linearity that makes sketches commute with summation), the server
+    sums the [depth, width] accumulators, and decodes ONCE at the root.
+    That equals flat compression of the summed message,
+    ``compress(edge_spec, key, Σ partial)``, up to f32 reassociation —
+    the ``spec_commutes_with_sum`` contract.  Billing is unchanged: each
+    active edge still ships one sketch accumulator, priced at
+    32·depth·width by ``edge_round_bits`` via ``spec_bits``.
+    """
     n_edges = partial.shape[0]
-    ks = jax.random.split(key, n_edges)
-    q = jax.vmap(lambda k, v: compress(edge_spec, k, v, use_kernel))(
-        ks, partial)
+    edge_spec = fill_params(edge_spec)
     gate = (edge_active > 0).reshape((-1,) + (1,) * (partial.ndim - 1))
-    return jnp.sum(jnp.where(gate, q, jnp.zeros_like(q)), axis=0)
+
+    def _recompress(_):
+        ks = jax.random.split(key, n_edges)
+        q = jax.vmap(lambda k, v: compress(edge_spec, k, v, use_kernel))(
+            ks, partial)
+        return jnp.sum(jnp.where(gate, q, jnp.zeros_like(q)), axis=0)
+
+    def _sketch_sum(_):
+        enc = jax.vmap(
+            lambda v: count_sketch_encode(key, v, edge_spec.params))(partial)
+        tgate = (edge_active > 0).reshape((-1, 1, 1))
+        table = jnp.sum(jnp.where(tgate, enc, jnp.zeros_like(enc)), axis=0)
+        return count_sketch_decode(key, table, partial[0], edge_spec.params)
+
+    return jax.lax.cond(edge_spec.family == FAMILY_COUNT_SKETCH,
+                        _sketch_sum, _recompress, None)
 
 
 def edge_combine(edge_spec: CompressorSpec, key, x: jnp.ndarray,

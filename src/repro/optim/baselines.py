@@ -84,7 +84,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.compressors import (CompressorSpec, as_spec, compress,
+from repro.core.compressors import (CompressorSpec, make_spec, compress,
                                     spec_bits, spec_bits_many)
 from repro.core.driver import (ASYNC_SALT, COHORT_SALT, MessageBuffer,
                                StalenessSchedule, applied_staleness,
@@ -140,7 +140,7 @@ class DianaHParams(NamedTuple):
 
 def diana_hparams_from_config(cfg: DianaConfig) -> DianaHParams:
     return DianaHParams(jnp.float32(cfg.alpha), jnp.float32(cfg.gamma),
-                        as_spec(cfg.compressor))
+                        make_spec(cfg.compressor))
 
 
 def diana_hparam_grid(alphas=(1.0,), gammas=(0.5,), levels=(64.0,),
@@ -461,7 +461,7 @@ class FedNLHParams(NamedTuple):
 
 
 def fednl_hparams_from_config(cfg: FedNLConfig) -> FedNLHParams:
-    return FedNLHParams(jnp.float32(cfg.alpha), as_spec(cfg.compressor))
+    return FedNLHParams(jnp.float32(cfg.alpha), make_spec(cfg.compressor))
 
 
 def fednl_hparam_grid(alphas=(1.0,), fracs=(0.25,), ps=None) -> FedNLHParams:

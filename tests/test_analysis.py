@@ -409,6 +409,19 @@ def test_semantic_switch_tables_clean():
     assert check_switch_tables() == []
 
 
+def test_semantic_switch_arity_is_six_families():
+    # the auto-counted FAMILY_* registry drives the required lax.switch
+    # arity — the six-family algebra (identity/dither/natural/topk/
+    # count_sketch/minmax) must be contiguous 0..5 so every dispatch
+    # table is checked at exactly 6 literal branches
+    from repro.core import compressors
+    fams = sorted(getattr(compressors, n) for n in dir(compressors)
+                  if n.startswith("FAMILY_"))
+    assert fams == [0, 1, 2, 3, 4, 5]
+    assert compressors.FAMILY_COUNT_SKETCH == 4
+    assert compressors.FAMILY_MINMAX == 5
+
+
 def test_semantic_switch_branch_counter_sees_missing_branch():
     from repro.analysis.semantic import _switch_branch_counts
     src = textwrap.dedent("""

@@ -441,7 +441,7 @@ def test_stack_specs_family_axis_grid():
         get_method("flecs_cgd").grid(grad_levels=(16.0, 64.0),
                                      grad_specs=stack_specs("identity",
                                                             "dither64"))
-    from repro.core.compressors import spec_from_name as _sfn
+    from repro.core.compressors import make_spec as _sfn
     with pytest.raises(ValueError):
         get_method("flecs_cgd").grid(grad_levels=(16.0, 64.0),
                                      grad_specs=_sfn("dither64"))
@@ -450,8 +450,8 @@ def test_stack_specs_family_axis_grid():
                                      hess_specs=_sfn("dither64"))
     # a SCALAR spec pins the compressor across the other axes (plain
     # FLECS's identity gradients alongside a traced p sweep)
-    from repro.core.compressors import spec_from_name
-    hp = get_method("flecs").grid(grad_specs=spec_from_name("identity"),
+    from repro.core.compressors import make_spec
+    hp = get_method("flecs").grid(grad_specs=make_spec("identity"),
                                   ps=(1.0, 0.5))
     assert hp.alpha.shape == hp.p.shape == (2,)
     assert np.asarray(hp.grad_spec.family).tolist() == [FAMILY_IDENTITY] * 2
@@ -473,3 +473,49 @@ def test_psum_level_cap_traced():
     levels = jnp.asarray([8.0, 127.0, 2000.0])
     out = jax.jit(jax.vmap(lambda s: psum_level_cap(s, 4)))(levels)
     np.testing.assert_allclose(np.asarray(out), [8.0, 127.0, 511.0])
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: {dither, topk, count_sketch, minmax} as ONE traced family axis
+# ---------------------------------------------------------------------------
+
+def test_four_family_traced_axis_one_compile_exact_ledgers():
+    """The widened compressor algebra end-to-end: all four non-trivial
+    families stacked on ONE traced grid axis run as a single compiled
+    program, and each grid point's cumulative ledger equals its own
+    family's round_bits exactly — dither at ⌈log2(2s+1)⌉·d, the selection
+    families at kept·(32+⌈log2 d⌉), count-sketch d-free at
+    32·depth·min(width, d)."""
+    from repro.core.compressors import (FAMILY_COUNT_SKETCH, FAMILY_MINMAX,
+                                        FAMILY_TOPK)
+    from repro.core.flecs import hparams_round_bits
+    names = ("dither64", "topk0.25", "count_sketch64", "minmax0.5")
+    cfg = FlecsConfig(m=2)
+    hp = get_method("flecs_cgd").grid(grad_specs=stack_specs(*names))
+    plan = ExperimentPlan(problem=PROB,
+                          runs=(MethodRun("flecs_cgd", cfg=cfg,
+                                          hparams=hp),),
+                          iters=4)
+    api.reset_plan_stats()
+    res = run_plan(plan)
+    assert api.plan_compiles() == 1
+    assert np.asarray(hp.grad_spec.family).tolist() == [
+        FAMILY_DITHER, FAMILY_TOPK, FAMILY_COUNT_SKETCH, FAMILY_MINMAX]
+
+    price = np.asarray(hparams_round_bits(cfg, hp, D))          # [4]
+    m = cfg.m
+    db = int(np.ceil(np.log2(2 * 64 + 1)))            # dither64 bits/value
+    idx = 32 + int(np.ceil(np.log2(D)))               # selection wire word
+    hess = db * D * m + 32 * m * m                    # shared dither64 C, M
+    expect = [db * D + hess,                                  # dither64
+              int(np.ceil(0.25 * D)) * idx + hess,            # topk0.25
+              32 * 3 * min(64, D) + hess,                     # count_sketch
+              int(np.ceil(0.5 * D)) * idx + hess]             # minmax0.5
+    np.testing.assert_array_equal(price, expect)
+
+    bits = np.asarray(res.states["flecs_cgd"].bits_per_node)  # [4, N]
+    tr = res.traces["flecs_cgd"]
+    for g, name in enumerate(names):
+        active = np.asarray(tr["n_active"][g]).sum()
+        np.testing.assert_allclose(bits[g].sum(), active * price[g],
+                                   err_msg=name)

@@ -49,12 +49,12 @@ VLG, VLH = VP.make_oracles()
 
 
 def _identity_diana_hp(alphas=(1.0,), gammas=(0.5,)):
-    from repro.core.compressors import spec_from_name
+    from repro.core.compressors import make_spec
     a = jnp.asarray(alphas, jnp.float32)
     g = jnp.broadcast_to(jnp.asarray(gammas, jnp.float32), a.shape)
     spec = jax.tree.map(
         lambda v: jnp.broadcast_to(jnp.asarray(v), a.shape),
-        spec_from_name("identity"))
+        make_spec("identity"))
     return DianaHParams(a, g, spec, None)
 
 

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compressors import dither_bits, get_compressor
+from repro.core.compressors import dither_bits
 from repro.core.driver import (bits_dtype, participation_mask, run_experiment)
 from repro.core.flecs import (FlecsConfig, bits_per_round, init_state,
                               make_flecs_step)
@@ -40,7 +40,7 @@ def _one_round(cfg):
 def test_cgd_gradient_bits_formula(s):
     """CGD grad payload = ⌈log2(2s+1)⌉·d; FLECS pays 32·d for the same."""
     m = 2
-    c_hess = get_compressor("dither64").bits_per_value
+    c_hess = float(dither_bits(jnp.float32(64)))
     cgd = _one_round(FlecsConfig(m=m, grad_compressor=f"dither{s}",
                                  hess_compressor="dither64"))
     flecs = _one_round(FlecsConfig(m=m, grad_compressor="identity",

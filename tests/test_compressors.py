@@ -13,8 +13,9 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core.compressors import (decode_int8, dither_bits, encode_int8,
-                                    get_compressor, identity, natural,
+from repro.core.compressors import (compress, count_sketch, decode_int8,
+                                    dither_bits, encode_int8, identity,
+                                    make_spec, min_max, natural,
                                     random_dithering, spec_omega, top_k)
 
 vec = st.lists(st.floats(-100, 100, allow_nan=False, width=32),
@@ -90,7 +91,7 @@ def test_dither_bits_formula_random_levels_and_shapes(s, dims):
     below where float32 log2 ulp error could misround the ceiling.)"""
     d = int(np.prod(dims))
     expect = math.ceil(math.log2(2 * s + 1))
-    assert random_dithering(s).bits_per_value == expect
+    assert random_dithering(s).bits(1) == expect
     # traced-safe helper agrees, on python ints and traced f32 scalars alike
     assert float(dither_bits(s)) == expect
     assert float(dither_bits(jnp.float32(s))) == expect
@@ -201,9 +202,107 @@ def test_int8_sum_compatible(rng):
 
 
 def test_registry():
-    assert get_compressor("dither64").name == "dither64"
-    assert get_compressor("identity").bits_per_value == 32.0
-    assert get_compressor("dither128").bits_per_value == np.ceil(
-        np.log2(257))
+    assert random_dithering(64).name == "dither64"
+    assert identity().bits(1) == 32.0
+    assert random_dithering(128).bits(1) == np.ceil(np.log2(257))
     with pytest.raises(ValueError):
-        get_compressor("nope")
+        make_spec("nope")
+
+
+# ---------------------------------------------------------------------------
+# The sketch/sampling families (Definition 3 membership, like the above)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(vec, st.sampled_from([8, 16, 32]), st.sampled_from([1, 3, 5]))
+def test_count_sketch_unbiased_and_omega_bound(x, width, depth):
+    """E[Q(x)] = x at hh_frac = 1 (each estimator row's collision noise is
+    symmetric about the true value, so the row median is exactly unbiased)
+    and E‖Q(x) − x‖² ≤ ω‖x‖² with ω = d/width reported by ``spec_omega``
+    (the single-row collision-variance bound; the median over depth rows
+    only concentrates it further)."""
+    if np.allclose(x, 0):
+        return
+    d = x.size
+    Q = count_sketch(width, depth)
+    assert Q.unbiased
+    nrm2 = float(np.sum(np.float64(x) ** 2))
+    wc = min(width, d)
+    assert float(spec_omega(Q.spec, d)) == pytest.approx(d / wc)
+    keys = jax.random.split(jax.random.key(11), 512)
+    qs = jax.vmap(lambda k: Q.compress(k, jnp.asarray(x)))(keys)
+    mean = np.asarray(jnp.mean(qs, axis=0))
+    # per-coordinate estimator std <= sqrt(||x||²/w): CLT tolerance
+    tol = 6.0 * np.sqrt(nrm2 / wc) / np.sqrt(512) + 1e-5
+    np.testing.assert_allclose(mean, x, atol=tol)
+    err = float(jnp.mean(jnp.sum(
+        (qs.astype(jnp.float64) - np.float64(x)) ** 2, axis=-1)))
+    slack = 6.0 * (d / wc) * nrm2 / np.sqrt(512)
+    assert err <= (d / wc) * nrm2 * 1.05 + slack + 1e-5
+
+
+@settings(max_examples=15, deadline=None)
+@given(vec, st.sampled_from([0.1, 0.3, 0.7]))
+def test_minmax_unbiased_and_omega_bound(x, frac):
+    """Min-max sampling: inverse-probability reweighting makes E[Q(x)] = x
+    exactly, and the error variance Σ x_i²(1 − p_i)/p_i is available in
+    closed form — checked *deterministically* against the ω = d/⌈frac·d⌉
+    bound of ``spec_omega`` (Σ x_i²/p_i ≤ ‖x‖₁²/k ≤ (d/k)‖x‖² by
+    Cauchy–Schwarz); the sampled error only has to agree with the analytic
+    value within statistical tolerance."""
+    if np.allclose(x, 0):
+        return
+    d = x.size
+    Q = min_max(frac)
+    assert Q.unbiased
+    xf = np.float64(x)
+    nrm2 = float(np.sum(xf ** 2))
+    k = min(max(1, math.ceil(frac * d)), d)
+    p = np.minimum(k * np.abs(xf) / np.sum(np.abs(xf)), 1.0)
+    var = np.where(p > 0, xf ** 2 * (1 - p) / np.maximum(p, 1e-300), 0.0)
+    analytic = float(np.sum(var))
+    omega = float(spec_omega(Q.spec, d))
+    assert omega == pytest.approx(d / k)
+    assert analytic <= omega * nrm2 * (1 + 1e-6) + 1e-9
+
+    keys = jax.random.split(jax.random.key(13), 512)
+    qs = jax.vmap(lambda kk: Q.compress(kk, jnp.asarray(x)))(keys)
+    mean = np.asarray(jnp.mean(qs, axis=0), np.float64)
+    tol = 6.0 * np.sqrt(var / 512) + 1e-4
+    assert np.all(np.abs(mean - xf) <= tol)
+    err = float(jnp.mean(jnp.sum(
+        (qs.astype(jnp.float64) - xf) ** 2, axis=-1)))
+    # per-draw error is a sum of d bounded-variance terms: CLT on the mean
+    tol_err = 0.25 * analytic + 6.0 * np.sqrt(
+        float(np.sum(var ** 2)) / 512) + 1e-4
+    assert abs(err - analytic) <= tol_err + analytic  # one-sided slack
+    assert err <= omega * nrm2 * 1.05 + tol_err
+
+
+def test_count_sketch_heavy_hitters_sparsify(rng):
+    """hh_frac < 1 keeps at most ⌈hh_frac·d⌉ coordinates of the median
+    estimate (a biased top-k-style contraction — ``unbiased`` flags it)."""
+    Q = count_sketch(width=32, depth=3, hh_frac=0.25)
+    assert not Q.unbiased
+    x = jnp.asarray(np.random.default_rng(3).normal(size=40), jnp.float32)
+    y = np.asarray(Q.compress(jax.random.key(0), x))
+    assert np.count_nonzero(y) <= 10
+
+
+def test_count_sketch_encode_is_linear(rng):
+    """sketch(Σx) == Σ sketch(x) under a shared key — the property the
+    hierarchy's sketch-domain aggregation fast path rests on (decode of
+    the summed table equals flat compression of the sum)."""
+    from repro.core.compressors import (count_sketch_decode,
+                                        count_sketch_encode)
+    spec = make_spec("count_sketch", width=16, depth=3)
+    key = jax.random.key(21)
+    xs = jnp.asarray(rng.normal(size=(5, 24)), jnp.float32)
+    t_sum = count_sketch_encode(key, jnp.sum(xs, axis=0), spec.params)
+    t_each = sum(count_sketch_encode(key, xs[i], spec.params)
+                 for i in range(5))
+    np.testing.assert_allclose(np.asarray(t_sum), np.asarray(t_each),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(count_sketch_decode(key, t_sum, xs[0], spec.params)),
+        np.asarray(compress(spec, key, jnp.sum(xs, axis=0))))

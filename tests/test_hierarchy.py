@@ -9,8 +9,10 @@ Pins the subsystem's contracts:
   * the cohort combiner (segment_sum) equals the full-axis combiner;
   * the edge spec is a TRACED sweep axis (``hparam_grid(edge_levels=...)``)
     and rides ``ExperimentPlan`` under one-compile-per-figure;
-  * ``spec_commutes_with_sum`` knows which families commute (identity yes,
-    dithering/natural/top-k no);
+  * ``spec_commutes_with_sum`` knows which families commute (identity and
+    count-sketch yes, dithering/natural/top-k/min-max no), and the
+    count-sketch sketch-domain fast path equals flat compression of the
+    masked sum at tight tolerance with an exactly priced backhaul ledger;
   * the guards fail loudly: missing edge_spec/edge_bits, non-dividing
     n_edges, empty trees.
 """
@@ -21,7 +23,7 @@ import pytest
 
 from repro.core import api
 from repro.core.api import ExperimentPlan, MethodRun, run_plan
-from repro.core.compressors import spec_commutes_with_sum, spec_from_name
+from repro.core.compressors import make_spec, spec_commutes_with_sum
 from repro.core.driver import bits_dtype, masked_mean, run_sweep
 from repro.core.flecs import (FlecsConfig, hparam_grid, init_state,
                               make_flecs_sweep_step)
@@ -40,7 +42,7 @@ def _identity_edge_hp(hp):
     """Broadcast an identity edge spec across the [G] grid."""
     G = hp.alpha.shape[0]
     eid = jax.tree.map(lambda a: jnp.broadcast_to(jnp.asarray(a), (G,)),
-                       spec_from_name("identity"))
+                       make_spec("identity"))
     return hp._replace(edge_spec=eid)
 
 
@@ -86,7 +88,7 @@ def test_edge_ledger_arithmetic_exact_full_participation():
     fs, tr = run_sweep(make_flecs_sweep_step(cfg, LG, LH), hp,
                        init_state(jnp.zeros(D), N, n_edges=E),
                        jax.random.key(1), iters)
-    price = float(edge_round_bits(spec_from_name("identity"), D, m))
+    price = float(edge_round_bits(make_spec("identity"), D, m))
     assert price == 32.0 * (D + D * m + m * m)
     np.testing.assert_array_equal(np.asarray(fs.edge_bits),
                                   np.full((1, E), iters * price))
@@ -102,12 +104,12 @@ def test_idle_edges_ship_nothing_and_pay_nothing():
     # randomized (dithering) edge spec — the gate zeroes the payload
     x = jnp.arange(8.0).reshape(8, 1) + 1.0
     mask = jnp.asarray([1.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0, 1.0])
-    total, edge_active = edge_combine(spec_from_name("dither64"),
+    total, edge_active = edge_combine(make_spec("dither64"),
                                       jax.random.key(2), x, mask, n_edges=4)
     np.testing.assert_array_equal(np.asarray(edge_active), [2.0, 0.0, 1.0, 2.0])
     # recompute with the idle block's values mangled: identical result
     x_mangled = x.at[2:4].set(1e6)
-    total2, _ = edge_combine(spec_from_name("dither64"), jax.random.key(2),
+    total2, _ = edge_combine(make_spec("dither64"), jax.random.key(2),
                              x_mangled, mask, n_edges=4)
     np.testing.assert_array_equal(np.asarray(total), np.asarray(total2))
 
@@ -115,7 +117,7 @@ def test_idle_edges_ship_nothing_and_pay_nothing():
 def test_identity_edge_combine_matches_masked_mean():
     x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 5)), jnp.float32)
     mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0, 0.0])
-    total, _ = edge_combine(spec_from_name("identity"), jax.random.key(0),
+    total, _ = edge_combine(make_spec("identity"), jax.random.key(0),
                             x, mask, n_edges=4)
     want = masked_mean(x, mask) * jnp.maximum(jnp.sum(mask), 1.0)
     np.testing.assert_allclose(np.asarray(total), np.asarray(want),
@@ -129,7 +131,7 @@ def test_cohort_combine_matches_full_axis():
                     jnp.float32)
     mask = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0])
     ids = jnp.arange(8)
-    spec = spec_from_name("identity")
+    spec = make_spec("identity")
     full, act_full = edge_combine(spec, jax.random.key(3), x, mask, 4)
     coh, act_coh = edge_combine_cohort(spec, jax.random.key(3), x, mask,
                                        ids, n_total=8, n_edges=4)
@@ -164,7 +166,7 @@ def test_edge_levels_traced_axis_prices_per_point():
                       jax.random.key(4), iters)
     bits = np.asarray(fs.edge_bits)                          # [2, E]
     for g, level in enumerate((8.0, 64.0)):
-        price = float(edge_round_bits(spec_from_name(f"dither{int(level)}"),
+        price = float(edge_round_bits(make_spec(f"dither{int(level)}"),
                                       D, m))
         np.testing.assert_array_equal(bits[g], np.full(E, iters * price))
     assert bits[0, 0] < bits[1, 0]              # coarser backhaul is cheaper
@@ -181,7 +183,7 @@ def test_plan_runs_hierarchy_one_compile():
     res = run_plan(plan)
     assert api.plan_compiles() - before == 1
     eb = np.asarray(res.states["flecs_cgd"].edge_bits)
-    price = float(edge_round_bits(spec_from_name("dither64"), D, cfg.m))
+    price = float(edge_round_bits(make_spec("dither64"), D, cfg.m))
     np.testing.assert_array_equal(eb, np.full((1, 4), 4 * price))
 
 
@@ -190,9 +192,60 @@ def test_plan_runs_hierarchy_one_compile():
 # ---------------------------------------------------------------------------
 
 def test_spec_commutes_with_sum_by_family():
-    assert bool(spec_commutes_with_sum(spec_from_name("identity")))
-    for name in ("dither64", "natural", "topk0.25"):
-        assert not bool(spec_commutes_with_sum(spec_from_name(name))), name
+    assert bool(spec_commutes_with_sum(make_spec("identity")))
+    assert bool(spec_commutes_with_sum(make_spec("count_sketch64")))
+    for name in ("dither64", "natural", "topk0.25", "minmax0.25"):
+        assert not bool(spec_commutes_with_sum(make_spec(name))), name
+
+
+# ---------------------------------------------------------------------------
+# the count-sketch sketch-domain fast path
+# ---------------------------------------------------------------------------
+
+def test_count_sketch_edge_combine_equals_flat_compress():
+    """Sketches commute with psum: summing per-edge sketch accumulators
+    and decoding once equals flat compression of the masked sum (same
+    shared key ⇒ same hash functions), up to f32 reassociation — the
+    ``spec_commutes_with_sum`` contract, which no nonlinear family meets."""
+    from repro.core.compressors import compress
+    spec = make_spec("count_sketch", width=16, depth=3)
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(8, 10)),
+                    jnp.float32)
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 1.0, 0.0, 1.0, 1.0])
+    key = jax.random.key(9)
+    total, _ = edge_combine(spec, key, x, mask, n_edges=4)
+    flat = compress(spec, key, jnp.sum(mask[:, None] * x, axis=0))
+    np.testing.assert_allclose(np.asarray(total), np.asarray(flat),
+                               rtol=1e-5, atol=1e-6)
+    # idle edges still contribute exact zeros on the sketch path
+    x_mangled = x.at[4:6].set(1e6).at[5].set(1e6)
+    mask_idle = mask.at[4].set(0.0)
+    t1, act = edge_combine(spec, key, x, mask_idle, n_edges=4)
+    t2, _ = edge_combine(spec, key, x_mangled.at[4].set(-3.0), mask_idle,
+                         n_edges=4)
+    assert float(act[2]) == 0.0
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+
+
+def test_count_sketch_edge_plan_bit_ledger_exact():
+    """Hierarchical count-sketch figure: one compile, and the backhaul
+    ledger is exactly iters x edge_round_bits, i.e. priced at the sketch's
+    32·depth·width accumulator per payload (width clipped to the payload
+    size — the m·m Gram block is smaller than the sketch width here)."""
+    cfg = FlecsConfig(m=2, hierarchy=HierarchyConfig(
+        n_edges=4, edge_compressor="count_sketch16"))
+    plan = ExperimentPlan(problem=PROB,
+                          runs=(MethodRun("flecs_cgd", cfg=cfg),), iters=4)
+    before = api.plan_compiles()
+    res = run_plan(plan)
+    assert api.plan_compiles() - before == 1
+    spec = make_spec("count_sketch16")
+    price = float(edge_round_bits(spec, D, cfg.m))
+    dep, w = 3, 16
+    assert price == 32.0 * dep * (min(w, D) + min(w, D * cfg.m)
+                                  + min(w, cfg.m * cfg.m))
+    eb = np.asarray(res.states["flecs_cgd"].edge_bits)
+    np.testing.assert_array_equal(eb, np.full((1, 4), 4 * price))
 
 
 def test_hierarchy_guards():

@@ -213,7 +213,7 @@ def test_bits_only_kernels_match_spec_bits(s, d):
 def test_compress_dispatch_kernel_equals_jnp(rng, name):
     """`compress`/`spec_bits` with use_kernel=True are drop-ins for the
     jnp path: exact values and exact bits, eagerly and under jit."""
-    spec = compressors.spec_from_name(name)
+    spec = compressors.make_spec(name)
     x = jnp.asarray(rng.normal(size=(300,)), jnp.float32)
     key = jax.random.key(1)
     a = compressors.compress(spec, key, x, False)
@@ -234,7 +234,7 @@ def test_fused_vmap_jit_switch(rng):
     xs = jnp.asarray(rng.normal(size=(8, 200)), jnp.float32)
     keys = jax.random.split(jax.random.key(3), 8)
     for name in ("dither64", "topk0.25"):
-        spec = compressors.spec_from_name(name)
+        spec = compressors.make_spec(name)
         f0 = jax.jit(jax.vmap(
             lambda k, x: compressors.compress(spec, k, x, False)))
         f1 = jax.jit(jax.vmap(
@@ -251,7 +251,7 @@ def test_oversize_and_unsupported_dtype_fall_back(rng, monkeypatch):
     x = jnp.asarray(rng.normal(size=(200,)), jnp.float32)
     key = jax.random.key(2)
     assert not comp_ops.supports(x)
-    spec = compressors.spec_from_name("dither64")
+    spec = compressors.make_spec("dither64")
     a = compressors.compress(spec, key, x, False)
     b = compressors.compress(spec, key, x, True)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -20,10 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.compressors import (FAMILY_DITHER, as_spec, compress,
-                                    dither_spec, get_compressor,
-                                    identity_spec, natural_spec, spec_bits,
-                                    spec_from_name, spec_omega, topk_spec)
+from repro.core.compressors import (FAMILY_COUNT_SKETCH, FAMILY_DITHER,
+                                    FAMILY_IDENTITY, Compressor, compress,
+                                    count_sketch_spec, dither_spec,
+                                    identity_spec, make_spec, minmax_spec,
+                                    natural_spec, random_dithering,
+                                    spec_bits, spec_omega, topk_spec)
 from repro.core.driver import (StalenessSchedule, damped_alpha,
                                run_async_sweep, run_experiment, run_sweep,
                                sample_delays)
@@ -48,10 +50,11 @@ def test_spec_dispatch_matches_static_wrappers(rng):
     => same draws; the static wrapper IS the spec path)."""
     x = jnp.asarray(rng.normal(size=37), jnp.float32)
     key = jax.random.key(3)
-    for name in ("identity", "dither16", "natural", "topk0.25"):
-        Q = get_compressor(name)
+    for name in ("identity", "dither16", "natural", "topk0.25",
+                 "count_sketch16", "minmax0.25"):
+        Q = Compressor(name, make_spec(name))
         np.testing.assert_array_equal(
-            np.asarray(compress(spec_from_name(name), key, x)),
+            np.asarray(compress(make_spec(name), key, x)),
             np.asarray(Q.compress(key, x)))
         np.testing.assert_allclose(float(spec_bits(Q.spec, 37)), Q.bits(37))
         np.testing.assert_allclose(float(spec_omega(Q.spec, 37)),
@@ -75,18 +78,24 @@ def test_traced_family_axis_in_one_program(rng):
     vmapped program — the lax.switch dispatch the CI pin exercises."""
     x = jnp.asarray(rng.normal(size=30), jnp.float32)
     specs = jax.tree.map(lambda *a: jnp.stack(a), identity_spec(),
-                         dither_spec(16.0), natural_spec(), topk_spec(0.2))
+                         dither_spec(16.0), natural_spec(), topk_spec(0.2),
+                         count_sketch_spec(16.0, 3.0), minmax_spec(0.2))
     key = jax.random.key(0)
     ys = jax.jit(jax.vmap(lambda sp: compress(sp, key, x)))(specs)
-    assert ys.shape == (4, 30)
+    assert ys.shape == (6, 30)
     np.testing.assert_array_equal(np.asarray(ys[0]), np.asarray(x))
     np.testing.assert_array_equal(
         np.asarray(ys[1]),
         np.asarray(compress(dither_spec(16.0), key, x)))
+    np.testing.assert_array_equal(
+        np.asarray(ys[4]),
+        np.asarray(compress(count_sketch_spec(16.0, 3.0), key, x)))
     bits = jax.vmap(lambda sp: spec_bits(sp, 30))(specs)
     np.testing.assert_allclose(
         np.asarray(bits),
         [32 * 30, math.ceil(math.log2(33)) * 30, 9 * 30,
+         6 * (32 + math.ceil(math.log2(30))),
+         32 * 3 * 16,                       # sketch accumulator, d-free
          6 * (32 + math.ceil(math.log2(30)))])
 
 
@@ -100,7 +109,7 @@ def test_traced_dither_level_matches_static(rng):
             lambda sv: compress(dither_spec(sv), key, x))(jnp.float32(s))
         np.testing.assert_array_equal(
             np.asarray(traced),
-            np.asarray(get_compressor(f"dither{s}").compress(key, x)))
+            np.asarray(random_dithering(s).compress(key, x)))
 
 
 def test_topk_bits_dimension_aware():
@@ -112,10 +121,14 @@ def test_topk_bits_dimension_aware():
         idx_bits = math.ceil(math.log2(d)) if d > 1 else 0
         expect = kept * (32 + idx_bits)
         assert float(spec_bits(topk_spec(frac), d)) == expect, (d, frac)
-        assert get_compressor(f"topk{frac}").bits(d) == expect
-    # per-element bits are ill-defined for top-k: fail loudly
-    with pytest.raises(ValueError):
-        get_compressor("topk0.25").bits_per_value
+        assert Compressor("topk", make_spec("topk", frac=frac)).bits(d) \
+            == expect
+    # per-element bits are ill-defined for every dimension-dependent
+    # family: the deprecated query still fails loudly
+    for name in ("topk0.25", "count_sketch16", "minmax0.25"):
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match=r"use \.bits\(d\)"):
+                Compressor(name, make_spec(name)).bits_per_value
     # ... and flow through the round ledger when top-k compresses the
     # Hessian difference
     cfg = FlecsConfig(m=2, grad_compressor="dither64",
@@ -131,12 +144,54 @@ def test_topk_bits_dimension_aware():
     np.testing.assert_allclose(np.asarray(st.bits_per_node), 2 * expect)
 
 
-def test_as_spec_accepts_all_forms():
-    Q = get_compressor("dither16")
+def test_make_spec_accepts_all_forms():
+    Q = random_dithering(16)
     for form in ("dither16", Q, Q.spec):
-        sp = as_spec(form)
+        sp = make_spec(form)
         assert int(sp.family) == FAMILY_DITHER
         assert float(sp.s) == 16.0
+    # bare family name + keyword params
+    sp = make_spec("count_sketch", width=32, depth=5, hh_frac=0.5)
+    assert int(sp.family) == FAMILY_COUNT_SKETCH
+    assert [float(v) for v in sp.params] == [32.0, 5.0, 0.5]
+    assert float(make_spec("minmax", frac=0.4).frac) == pytest.approx(0.4)
+    # suffix/keyword conflicts, unknown keywords, and params on a spec
+    # pass-through all fail loudly
+    with pytest.raises(ValueError, match="both"):
+        make_spec("dither64", s=16)
+    with pytest.raises(ValueError, match="width"):
+        make_spec("topk0.1", width=8)
+    with pytest.raises(ValueError, match="keyword"):
+        make_spec(identity_spec(), s=2.0)
+
+
+def test_make_spec_unknown_name_lists_valid_families():
+    # Satellite: an unknown family fails at CONSTRUCTION time with the
+    # valid-name list, not as an opaque switch-index error deep in a trace.
+    with pytest.raises(ValueError, match="identity.*dither.*natural.*topk"
+                                         ".*count_sketch.*minmax"):
+        make_spec("nope")
+    with pytest.raises(ValueError, match="valid names"):
+        make_spec("ditherx")                  # unparseable numeric suffix
+
+
+def test_deprecated_constructor_aliases_warn_and_delegate():
+    # spec_from_name / as_spec / get_compressor survive as thin
+    # DeprecationWarning aliases of make_spec.
+    from repro.core.compressors import (as_spec, get_compressor,
+                                        spec_from_name)
+    with pytest.warns(DeprecationWarning):
+        sp = spec_from_name("dither64")
+    assert float(sp.s) == 64.0
+    with pytest.warns(DeprecationWarning):
+        assert int(as_spec("identity").family) == FAMILY_IDENTITY
+    with pytest.warns(DeprecationWarning):
+        Q = get_compressor("natural")
+    assert Q.name == "natural"
+    # the aliases inherit make_spec's loud unknown-name error
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="valid names"):
+            spec_from_name("nope")
 
 
 # ---------------------------------------------------------------------------
